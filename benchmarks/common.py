@@ -1,0 +1,56 @@
+"""Shared helpers for the benchmark suite."""
+
+from __future__ import annotations
+
+import sys
+import time
+from pathlib import Path
+
+# allow `python -m benchmarks.run` from the repo root without install
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import numpy as np
+
+from repro.core.hardware import ModelDims
+
+LLAMA3_8B = ModelDims(d_model=4096, n_heads=32, n_kv_heads=8, head_dim=128,
+                      d_ff=14336)
+LLAMA3_3B = ModelDims(d_model=3072, n_heads=24, n_kv_heads=8, head_dim=128,
+                      d_ff=8192)
+QWEN3_14B = ModelDims(d_model=5120, n_heads=40, n_kv_heads=8, head_dim=128,
+                      d_ff=13824)
+
+N_LAYERS = {"llama3-8b": 32, "llama3-3b": 28, "qwen3-14b": 40}
+
+
+def correlated_kv(rng, n, hk, d, *, rho=0.7, true_rank=None):
+    """Token-correlated (optionally low-intrinsic-rank) synthetic K/V cache."""
+    if true_rank:
+        basis = rng.standard_normal((true_rank, hk * d))
+        coef = np.empty((n, true_rank))
+        prev = rng.standard_normal(true_rank)
+        for t in range(n):
+            prev = rho * prev + np.sqrt(1 - rho**2) * rng.standard_normal(true_rank)
+            coef[t] = prev
+        k = (coef @ basis).reshape(n, hk, d)
+    else:
+        k = np.empty((n, hk, d))
+        prev = rng.standard_normal((hk, d))
+        for t in range(n):
+            prev = rho * prev + np.sqrt(1 - rho**2) * rng.standard_normal((hk, d))
+            k[t] = prev
+    v = rng.standard_normal((n, hk, d))
+    return k.astype(np.float32), v.astype(np.float32)
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        self.us = (time.perf_counter() - self.t0) * 1e6
+
+
+def emit(name: str, us: float, derived: str) -> None:
+    print(f"{name},{us:.0f},{derived}")

@@ -1,0 +1,59 @@
+"""Needle-in-a-haystack through the real engine (paper Fig. 9 demo).
+
+Plants an induction-pattern needle in a long prompt, serves it through the
+disk-backed engine at several (depth × budget) points, and reports whether
+the needle's KV groups were selected at decode time.
+
+    PYTHONPATH=src python examples/long_context_niah.py
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import EngineConfig, KVSwapEngine
+from repro.data import SyntheticLMStream, make_needle_prompt
+from repro.models.transformer import (ModelConfig, TransformerAdapter, forward,
+                                      init_params)
+from repro.training.optim import AdamWConfig
+from repro.training.train import train_loop
+
+
+def main() -> None:
+    cfg = ModelConfig(name="niah", arch_type="dense", n_layers=2, d_model=64,
+                      n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128, vocab_size=97)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    stream = SyntheticLMStream(cfg.vocab_size, seed=11, copy_prob=0.25)
+    state, _ = train_loop(params, forward, cfg, stream, steps=120, batch=8,
+                          seq_len=64, opt_cfg=AdamWConfig(lr=3e-3), log_every=40)
+    params = state.params
+    adapter_model = TransformerAdapter(cfg)
+    rng = np.random.default_rng(0)
+    calib = rng.standard_normal((256, cfg.n_kv_heads, cfg.head_dim))
+
+    print("depth  selected_needle_groups / total_needle_groups")
+    for depth in (0.1, 0.3, 0.5, 0.7, 0.9):
+        task = make_needle_prompt(cfg.vocab_size, 96, depth=depth, seed=5)
+        prompt = task.tokens[None, :]
+        ecfg = EngineConfig(group_size=4, n_select=8, rank=16,
+                            reuse_capacity=16, max_seq=160)
+        with KVSwapEngine(adapter_model, params, ecfg, batch=1, calib_k=calib) as eng:
+            eng.prefill(prompt)
+            eng.decode_step(np.asarray([task.tokens[-1]]))
+            # inspect what the managers actually fetched this step
+            needle_groups = {p // ecfg.group_size for p in task.needle_span}
+            seen = set()
+            for reuse in eng.reuse:
+                for bi in range(1):
+                    seen |= reuse.resident(bi)
+            hit = len(needle_groups & seen)
+            print(f"{depth:5.1f}  {hit} / {len(needle_groups)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,97 @@
+"""End-to-end driver (the paper's kind is SERVING): train a small LM on the
+synthetic stream until it has real attention structure, then serve batched
+long-context requests through the KVSwap engine under a tight memory budget,
+comparing generation agreement and modeled throughput against Full-KV.
+
+    PYTHONPATH=src python examples/serve_batched.py [--steps 200] [--batch 4]
+"""
+
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import EngineConfig, KVSwapEngine
+from repro.data import SyntheticLMStream
+from repro.models.transformer import (ModelConfig, TransformerAdapter, forward,
+                                      init_params)
+from repro.serving import decode as D
+from repro.training.optim import AdamWConfig
+from repro.training.train import train_loop
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=96)
+    ap.add_argument("--gen-len", type=int, default=48)
+    ap.add_argument("--disk", choices=("nvme", "emmc"), default="nvme")
+    args = ap.parse_args()
+
+    cfg = ModelConfig(name="served", arch_type="dense", n_layers=4, d_model=128,
+                      n_heads=8, n_kv_heads=4, head_dim=16, d_ff=256,
+                      vocab_size=257)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+
+    print(f"== training {args.steps} steps on the synthetic stream ==")
+    stream = SyntheticLMStream(cfg.vocab_size, seed=7)
+    state, _ = train_loop(params, forward, cfg, stream, steps=args.steps,
+                          batch=8, seq_len=64, opt_cfg=AdamWConfig(lr=3e-3),
+                          log_every=max(args.steps // 5, 1))
+    params = state.params
+
+    print("\n== batched serving through KVSwap ==")
+    rng = np.random.default_rng(1)
+    prompts = stream.batch(10_000, args.batch, args.prompt_len)["tokens"]
+
+    # calibration K from the model itself (paper App. A.1)
+    cache = D.init_cache(cfg, args.batch, args.prompt_len + 8)
+    _, cache = D.prefill(params, cfg, jnp.asarray(prompts), cache)
+    calib = np.asarray(cache["layers"][0]["k"]).reshape(-1, cfg.n_kv_heads, cfg.head_dim)
+
+    adapter = TransformerAdapter(cfg)
+    # budget ≈ 2/3 of the context in groups of 4 (tight enough to exercise
+    # selection, generous enough that greedy decoding tracks Full-KV)
+    n_sel = max(8, (args.prompt_len + args.gen_len) // 6)
+    ecfg = EngineConfig(group_size=4, n_select=n_sel, rank=16,
+                        reuse_capacity=2 * n_sel,
+                        max_seq=args.prompt_len + args.gen_len + 8,
+                        disk=args.disk)
+    with KVSwapEngine(adapter, params, ecfg, batch=args.batch, calib_k=calib) as eng:
+        got = eng.generate(prompts, args.gen_len)
+        tput = eng.simulated_throughput()
+        reuse = eng.reuse_ratio()
+        mem = eng.metadata_bytes()
+        on_disk = eng.store.total_bytes_on_disk()
+
+    # Full-KV reference
+    toks = jnp.asarray(prompts)
+    ref = []
+    for _ in range(args.gen_len):
+        logits, _ = forward(params, cfg, toks)
+        nxt = jnp.argmax(logits[:, -1], -1)
+        ref.append(np.asarray(nxt))
+        toks = jnp.concatenate([toks, nxt[:, None]], 1)
+    ref_arr = np.stack(ref, 1)
+    agree = (got == ref_arr).mean()
+    # greedy decoding compounds: a single divergence changes the entire
+    # suffix — also report how long generations track Full-KV exactly
+    prefix = np.argmax(np.concatenate(
+        [got != ref_arr, np.ones((got.shape[0], 1), bool)], 1), 1)
+
+    print(f"\nagreement with Full-KV : {agree:.1%}")
+    print(f"exact-prefix length    : {prefix.mean():.1f} / {args.gen_len} tokens")
+    print(f"reuse ratio            : {reuse:.2f}  (paper: 0.75-0.81)")
+    print(f"modeled throughput     : {tput:.1f} tok/s on {args.disk}")
+    print(f"KVSwap resident memory : {mem['total']} B "
+          f"(full cache on disk: {on_disk} B)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""Assigned-architecture configs.  One module per architecture; each exports
+
+* ``config()``       — the exact assigned full-scale configuration
+* ``smoke_config()`` — reduced variant (≤2 layers, d_model ≤ 512, ≤4 experts)
+  for CPU smoke tests
+
+Use ``repro.configs.registry.get(arch_id)`` / ``list_archs()``.
+"""
+
+from repro.configs.registry import ARCHS, get, list_archs, smoke
+
+__all__ = ["ARCHS", "get", "list_archs", "smoke"]

@@ -1,0 +1,21 @@
+"""KVSwap core: the paper's contribution as a composable JAX module.
+
+Public API (mirrors the paper's Fig. 4 usage):
+
+>>> from repro.core import EngineConfig, KVSwapEngine, tuner
+>>> tuned = tuner.solve(tuner.TunerInputs(...))          # offline tuning
+>>> eng = KVSwapEngine(model_adapter, params, EngineConfig(**...), batch=8)
+>>> eng.prefill(prompt_tokens)
+>>> eng.generate(prompt_tokens, n_new=256)
+"""
+
+from repro.core.engine import EngineConfig, KVSwapEngine
+from repro.core.lowrank import LowRankAdapter, compress_k, fit_adapter
+from repro.core.offload import DISKS, EMMC, NVME, DiskSpec, IOAccountant, KVDiskStore
+from repro.core.predictor import PredictorConfig, predict_groups
+
+__all__ = [
+    "EngineConfig", "KVSwapEngine", "LowRankAdapter", "compress_k",
+    "fit_adapter", "DISKS", "EMMC", "NVME", "DiskSpec", "IOAccountant",
+    "KVDiskStore", "PredictorConfig", "predict_groups",
+]

@@ -1,0 +1,327 @@
+"""KVSwap engine: prefill → disk, overlap-pipelined sparse decode (§3.4).
+
+Orchestration is host-side Python (as in the paper's runtime); all compute is
+jitted JAX.  The disk tier is the real memmap store; I/O *time* is modeled by
+the :class:`DiskSpec` accountant, and per-step latency is assembled with the
+paper's layer-pipelined overlap (I/O for layer *i* overlaps compute of layer
+*i−1*).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hardware
+from repro.core.adapter import ModelAdapter
+from repro.core.lowrank import LowRankAdapter, compress_k, fit_adapter
+from repro.core.manager import KVCacheManager
+from repro.core.offload import DISKS, DiskSpec, IOAccountant, KVDiskStore
+from repro.core.predictor import PredictorConfig
+from repro.core.reuse_buffer import ReuseBuffer
+from repro.core.rolling_buffer import RollingBuffer
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Runtime parameters — the tuple the offline tuner (§3.5) produces."""
+
+    group_size: int = 4            # G
+    n_select: int = 100            # M (selected groups per layer per step)
+    rank: int = 64                 # r  (σ = H_k·d / r)
+    reuse_capacity: int = 160      # C (groups per layer per sequence)
+    max_seq: int = 4096            # KV capacity (tokens)
+    disk: str = "nvme"
+    predict_from: str = "prev"     # "prev" (paper, overlappable) | "self"
+    kv_bits: int = 16              # 16 = raw dtype on disk; 8 = int8 (§7)
+    use_pallas: bool = False       # route attention through the Pallas kernel
+    dtype: str = "float32"
+    compute: str = "jetson-orin-agx"  # timing model for simulated throughput
+
+    @property
+    def disk_spec(self) -> DiskSpec:
+        return DISKS[self.disk]
+
+    @property
+    def np_dtype(self):
+        return np.dtype(self.dtype)
+
+
+@dataclasses.dataclass
+class StepStats:
+    io_seconds: float = 0.0
+    compute_seconds: float = 0.0
+    pipelined_seconds: float = 0.0
+    io_bytes: int = 0
+    io_requests: int = 0
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _klr_append(k_lr: jax.Array, rows: jax.Array, start: jax.Array) -> jax.Array:
+    """Write ``rows [B, G, r]`` into the preallocated ``k_lr [B, cap, r]``."""
+    return jax.lax.dynamic_update_slice(k_lr, rows, (0, start, 0))
+
+
+class KVSwapEngine:
+    """Serve one batch of sequences with the KVSwap runtime."""
+
+    def __init__(
+        self,
+        model: ModelAdapter,
+        params,
+        cfg: EngineConfig,
+        *,
+        batch: int,
+        adapter: LowRankAdapter | None = None,
+        calib_k: np.ndarray | None = None,
+    ):
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self.batch = batch
+        if adapter is None:
+            if calib_k is None:
+                raise ValueError("need a fitted LowRankAdapter or calibration K")
+            adapter = fit_adapter(calib_k, rank=cfg.rank)
+        if adapter.rank != cfg.rank:
+            raise ValueError(f"adapter rank {adapter.rank} != cfg.rank {cfg.rank}")
+        self.adapter = adapter
+
+        g = cfg.group_size
+        self.max_groups = (cfg.max_seq + g - 1) // g
+        self.cap_tokens = self.max_groups * g
+        # hybrid support: only "kv" layers own disk-backed KV state
+        self.layer_kinds = tuple(getattr(model, "layer_kinds", ("kv",) * model.n_layers))
+        self.kv_layers = [i for i, k in enumerate(self.layer_kinds) if k == "kv"]
+        self._kv_index = {layer: j for j, layer in enumerate(self.kv_layers)}
+        n_kv_layers = len(self.kv_layers)
+        self.accountant = IOAccountant(cfg.disk_spec)
+        self.store = KVDiskStore(
+            n_layers=n_kv_layers, batch=batch, max_groups=self.max_groups,
+            group_size=g, n_kv_heads=model.n_kv_heads, head_dim=model.head_dim,
+            dtype=cfg.np_dtype, accountant=self.accountant,
+            quant_bits=8 if cfg.kv_bits == 8 else 0,
+        )
+        if cfg.use_pallas:
+            from repro.models import layers as _L
+            _L.set_use_pallas(True)
+        mk = lambda: ReuseBuffer(
+            batch=batch, capacity=cfg.reuse_capacity, group_size=g,
+            n_kv_heads=model.n_kv_heads, head_dim=model.head_dim, dtype=cfg.np_dtype,
+        )
+        self.reuse = [mk() for _ in range(n_kv_layers)]
+        self.rolling = [
+            RollingBuffer(batch=batch, group_size=g, n_kv_heads=model.n_kv_heads,
+                          head_dim=model.head_dim, dtype=cfg.np_dtype)
+            for _ in range(n_kv_layers)
+        ]
+        self.managers = [
+            KVCacheManager(store=self.store, reuse=self.reuse[j], rolling=self.rolling[j], layer=j)
+            for j in range(n_kv_layers)
+        ]
+        # recurrent state for non-KV (SSM / xLSTM) layers
+        self.states: dict[int, object] = {}
+        # Preallocated compressed K cache, one per KV layer: [B, cap_tokens, r]
+        self.k_lr = [
+            jnp.zeros((batch, self.cap_tokens, cfg.rank), dtype=jnp.float32)
+            for _ in range(n_kv_layers)
+        ]
+        self.valid_tokens = 0        # tokens represented in k_lr (= n_groups·G)
+        self.seq_len = 0             # total tokens seen (incl. rolling tail)
+        self.pred_cfg = PredictorConfig(
+            group_size=g, n_select=cfg.n_select,
+            n_heads=model.n_heads, n_kv_heads=model.n_kv_heads,
+        )
+        self.compute_spec = hardware.ORIN if cfg.compute == "jetson-orin-agx" else hardware.TPU_V5E
+        self.dims = hardware.ModelDims(
+            d_model=model.d_model, n_heads=model.n_heads, n_kv_heads=model.n_kv_heads,
+            head_dim=model.head_dim, d_ff=getattr(model, "d_ff", 4 * model.d_model),
+        )
+        self.step_log: list[StepStats] = []
+
+    # ------------------------------------------------------------------
+    def metadata_bytes(self) -> dict:
+        """In-memory footprint of KVSwap state (the paper's Fig. 3a metric)."""
+        klr = self.batch * self.valid_tokens * self.cfg.rank * 4
+        klr_alloc = sum(int(np.prod(k.shape)) * 4 for k in self.k_lr)
+        reuse = sum(r.nbytes for r in self.reuse)
+        rolling = sum(r.nbytes for r in self.rolling)
+        return {
+            "k_lr_logical": klr * self.model.n_layers // max(self.model.n_layers, 1),
+            "k_lr_alloc": klr_alloc,
+            "reuse_buffer": reuse,
+            "rolling_buffer": rolling,
+            "total": klr_alloc + reuse + rolling,
+        }
+
+    # ------------------------------------------------------------------
+    def prefill(self, tokens: np.ndarray) -> jax.Array:
+        """Run full-attention prefill, spill KV to disk layer-by-layer, build
+        the compressed K cache.  Returns last-position logits ``[B, V]``."""
+        tokens = jnp.asarray(tokens)
+        b, s = tokens.shape
+        if b != self.batch:
+            raise ValueError(f"batch mismatch {b} != {self.batch}")
+        g = self.cfg.group_size
+        positions = jnp.arange(s)[None, :].repeat(b, axis=0)
+        x = self.model.embed(self.params, tokens)
+        ng = s // g
+        for layer in range(self.model.n_layers):
+            if self.layer_kinds[layer] == "state":
+                x, st = self.model.prefill_state_block(self.params, layer, x, positions)
+                self.states[layer] = st
+                continue
+            j = self._kv_index[layer]
+            x, k, v = self.model.prefill_block(self.params, layer, x, positions)
+            k_np = np.asarray(jax.device_get(k), dtype=self.cfg.np_dtype)
+            v_np = np.asarray(jax.device_get(v), dtype=self.cfg.np_dtype)
+            self.store.write_prefill(j, k_np, v_np)
+            tail = s - ng * g
+            if tail:
+                self.rolling[j].seed(k_np[:, ng * g :], v_np[:, ng * g :])
+            if ng:
+                rows = compress_k(k[:, : ng * g].astype(jnp.float32), self.adapter)
+                self.k_lr[j] = _klr_append(self.k_lr[j], rows, jnp.int32(0))
+        self.valid_tokens = ng * g
+        self.seq_len = s
+        return self.model.logits(self.params, x[:, -1])
+
+    # ------------------------------------------------------------------
+    def decode_step(self, token_ids: np.ndarray) -> jax.Array:
+        """Decode one token per sequence; returns logits ``[B, V]``."""
+        if self.seq_len + 1 > self.cap_tokens:
+            raise RuntimeError("KV capacity exceeded; raise cfg.max_seq")
+        cfg = self.cfg
+        b = self.batch
+        tok = jnp.asarray(token_ids).reshape(b, 1)
+        pos = jnp.full((b,), self.seq_len, dtype=jnp.int32)
+        x = self.model.embed(self.params, tok)[:, 0]
+        valid = jnp.int32(self.valid_tokens)
+
+        stats = StepStats()
+        t_compute = []
+        t_io = []
+        x_prev = x
+        flush_rows: list[tuple[int, jax.Array]] = []
+        for layer in range(self.model.n_layers):
+            if self.layer_kinds[layer] == "state":
+                x_prev = x
+                x, self.states[layer] = self.model.decode_state_block(
+                    self.params, layer, x, pos, self.states[layer]
+                )
+                t_compute.append(
+                    hardware.decode_layer_time(
+                        self.compute_spec, self.dims, n_ctx=0, batch=b)
+                )
+                t_io.append(0.0)
+                continue
+            j = self._kv_index[layer]
+            pred_src = x if (cfg.predict_from == "self" or layer == 0) else x_prev
+            q_pred = self.model.predict_query(self.params, layer, pred_src, pos)
+            ids, mask = self._predict(j, q_pred, valid)
+            io_before = self.accountant.read_seconds
+            table = self.managers[j].fetch(np.asarray(ids), np.asarray(mask))
+            t_io.append(self.accountant.read_seconds - io_before)
+            k_ctx, v_ctx, tok_mask, _ = self.managers[j].gather(table)
+            x_prev = x
+            x, k_new, v_new = self.model.decode_block(
+                self.params, layer, x, pos,
+                jnp.asarray(k_ctx), jnp.asarray(v_ctx), jnp.asarray(tok_mask),
+            )
+            flushed = self.managers[j].append_token(
+                np.asarray(jax.device_get(k_new), dtype=cfg.np_dtype),
+                np.asarray(jax.device_get(v_new), dtype=cfg.np_dtype),
+            )
+            if flushed is not None:
+                # compress the completed group's keys exactly as stored on disk
+                k_g = jnp.asarray(flushed[0], dtype=jnp.float32)
+                flush_rows.append((j, compress_k(k_g, self.adapter)))
+            n_ctx = k_ctx.shape[1] + 1
+            t_compute.append(
+                hardware.decode_layer_time(
+                    self.compute_spec, self.dims, n_ctx=n_ctx, batch=b,
+                    rank=cfg.rank, n_lr_tokens=self.valid_tokens,
+                )
+            )
+        for layer, rows in flush_rows:
+            self.k_lr[layer] = _klr_append(self.k_lr[layer], rows, jnp.int32(self.valid_tokens))
+        if flush_rows:
+            self.valid_tokens += cfg.group_size
+        self.seq_len += 1
+
+        stats.io_seconds = sum(t_io)
+        stats.compute_seconds = sum(t_compute)
+        stats.pipelined_seconds = self._pipeline_latency(t_compute, t_io)
+        snap = self.accountant.snapshot()
+        stats.io_bytes = snap["read_bytes"]
+        stats.io_requests = snap["read_requests"]
+        self.step_log.append(stats)
+        return self.model.logits(self.params, x)
+
+    def _predict(self, layer: int, q_pred: jax.Array, valid: jax.Array):
+        """Grouped critical-KV prediction against the compressed K cache.
+
+        ``predict_groups`` expects raw ``x``/``W_q``; the engine already has
+        the fully-normed query from the adapter, so it calls the lower-level
+        pieces directly.
+        """
+        from repro.core import predictor as P
+
+        q_lr = P.lowrank_queries(q_pred.astype(jnp.float32), self.adapter, self.model.n_heads)
+        scores = P.token_scores(q_lr, self.k_lr[layer])
+        gs = P.group_scores(scores, self.cfg.group_size, valid)
+        return P.select_groups(gs, self.cfg.n_select)
+
+    @staticmethod
+    def _pipeline_latency(t_compute: Sequence[float], t_io: Sequence[float]) -> float:
+        """Layer-pipelined step latency: I/O for layer i+1 overlaps compute of
+        layer i; layer 0's I/O is exposed (§3.3 'online prediction')."""
+        L = len(t_compute)
+        lat = t_io[0] if t_io else 0.0
+        for i in range(L):
+            nxt_io = t_io[i + 1] if i + 1 < L else 0.0
+            lat += max(t_compute[i], nxt_io)
+        return lat
+
+    # ------------------------------------------------------------------
+    def generate(self, prompt: np.ndarray, n_new: int, *, greedy: bool = True, rng: np.random.Generator | None = None) -> np.ndarray:
+        """Prefill + ``n_new`` decode steps.  Returns ``[B, n_new]`` tokens."""
+        logits = self.prefill(prompt)
+        out = []
+        for _ in range(n_new):
+            nxt = np.asarray(jnp.argmax(logits, axis=-1)) if greedy else np.array(
+                [rng.choice(logits.shape[-1], p=np.asarray(jax.nn.softmax(l))) for l in logits]
+            )
+            out.append(nxt)
+            logits = self.decode_step(nxt)
+        return np.stack(out, axis=1)
+
+    def reuse_ratio(self) -> float:
+        hits = sum(r.stats.hits for r in self.reuse)
+        miss = sum(r.stats.misses for r in self.reuse)
+        return hits / max(hits + miss, 1)
+
+    def simulated_throughput(self, skip: int = 1) -> float:
+        """Tokens/s under the modeled Jetson+disk pipeline (batch tokens)."""
+        steps = self.step_log[skip:] or self.step_log
+        if not steps:
+            return 0.0
+        t = sum(s.pipelined_seconds for s in steps) / len(steps)
+        return self.batch / t if t > 0 else 0.0
+
+    def close(self):
+        if self.cfg.use_pallas:
+            from repro.models import layers as _L
+            _L.set_use_pallas(False)
+        self.store.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

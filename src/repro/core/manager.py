@@ -1,0 +1,133 @@
+"""KV cache manager: mapping table over heterogeneous memory (KVSwap §3.4.4).
+
+Attention consumes KV entries from three physical regions:
+
+1. **reuse-buffer slots** that hit,
+2. **freshly loaded groups** from disk (inserted into reuse slots),
+3. the **rolling buffer** of not-yet-grouped recent tokens.
+
+The manager keeps a *mapping table* — logical slot → (region, physical index)
+— rebuilt before each attention call, mirroring OS virtual memory.  This is
+what makes the scheme PagedAttention-compatible: the kernel sees one logical,
+contiguous KV view plus a validity mask.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.offload import KVDiskStore
+from repro.core.reuse_buffer import ReuseBuffer
+from repro.core.rolling_buffer import RollingBuffer
+
+REGION_REUSE = 0
+REGION_ROLLING = 1
+
+
+@dataclasses.dataclass
+class MappingTable:
+    """Logical layout handed to the attention kernel for one layer/step."""
+
+    # [B, M] group ids selected (post-mask); -1 for invalid
+    group_ids: np.ndarray
+    # [B, M] slot index within the reuse buffer holding each selected group
+    # (-2 = staged transiently because the reuse buffer is pinned full)
+    slots: np.ndarray
+    # [B, M] bool — logical group validity
+    group_mask: np.ndarray
+    rolling_fill: int
+    # transient staging for groups that couldn't enter the reuse buffer
+    staged: dict = dataclasses.field(default_factory=dict)  # (bi, gid) -> [G,2,Hkv,d]
+
+
+class KVCacheManager:
+    """Per-layer runtime state binding the store, reuse and rolling buffers."""
+
+    def __init__(self, *, store: KVDiskStore, reuse: ReuseBuffer, rolling: RollingBuffer, layer: int):
+        self.store = store
+        self.reuse = reuse
+        self.rolling = rolling
+        self.layer = layer
+
+    def fetch(self, group_ids: np.ndarray, group_mask: np.ndarray) -> MappingTable:
+        """Resolve selected groups: reuse hits stay put, misses load from disk.
+
+        ``group_ids, group_mask``: ``[B, M]``.
+        """
+        b, m = group_ids.shape
+        slots = np.full((b, m), -1, dtype=np.int64)
+        ids_out = np.where(group_mask, group_ids, -1)
+        staged: dict = {}
+        for bi in range(b):
+            want = [int(g) for g, ok in zip(group_ids[bi], group_mask[bi]) if ok]
+            # de-dup, preserving order (top-k can repeat id 0 on masked rows)
+            want = list(dict.fromkeys(want))
+            want_set = set(want)
+            _, misses = self.reuse.lookup(bi, want)
+            if misses:
+                k_m, v_m = self.store.read_groups(self.layer, bi, misses)
+                for j, gid in enumerate(sorted(misses)):
+                    kv = np.stack([k_m[j], v_m[j]], axis=1)  # [G, 2, Hkv, d]
+                    # current working set is pinned; overflow stays staged
+                    if self.reuse.insert(bi, gid, kv, protected=want_set) is None:
+                        staged[(bi, gid)] = kv
+            for mi in range(m):
+                if group_mask[bi, mi]:
+                    gid = int(group_ids[bi, mi])
+                    slot = self.reuse._index[bi].get(gid)
+                    slots[bi, mi] = -2 if slot is None else slot
+        return MappingTable(
+            group_ids=ids_out, slots=slots, group_mask=np.asarray(group_mask, bool),
+            rolling_fill=self.rolling.fill, staged=staged,
+        )
+
+    def gather(self, table: MappingTable) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+        """Materialize the logical KV view.
+
+        Returns ``(k, v, token_mask, positions)`` with
+        ``k, v: [B, M*G + fill, H_kv, d]``, ``token_mask: [B, M*G + fill]``,
+        ``positions: [B, M*G + fill]`` absolute token positions (for kernels
+        that need them; RoPE is already baked into cached K).
+        """
+        b, m = table.slots.shape
+        g = self.reuse.group_size
+        fill = table.rolling_fill
+        hkv, d = self.rolling.k.shape[2], self.rolling.k.shape[3]
+        n_tok = m * g + fill
+        k = np.zeros((b, n_tok, hkv, d), dtype=self.rolling.k.dtype)
+        v = np.zeros_like(k)
+        mask = np.zeros((b, n_tok), dtype=bool)
+        pos = np.zeros((b, n_tok), dtype=np.int64)
+        for bi in range(b):
+            for mi in range(m):
+                if not table.group_mask[bi, mi]:
+                    continue
+                if table.slots[bi, mi] == -2:   # staged (reuse buffer pinned full)
+                    kv = table.staged[(bi, int(table.group_ids[bi, mi]))]
+                else:
+                    kv = self.reuse.slots[bi, table.slots[bi, mi]]  # [G, 2, Hkv, d]
+                sl = slice(mi * g, (mi + 1) * g)
+                k[bi, sl] = kv[:, 0]
+                v[bi, sl] = kv[:, 1]
+                mask[bi, sl] = True
+                gid = table.group_ids[bi, mi]
+                pos[bi, sl] = np.arange(gid * g, (gid + 1) * g)
+        if fill:
+            rk, rv = self.rolling.current()
+            k[:, m * g :] = rk
+            v[:, m * g :] = rv
+            mask[:, m * g :] = True
+            base = self.store.n_groups[self.layer][:, None] * g
+            pos[:, m * g :] = base + np.arange(fill)[None, :]
+        return k, v, mask, pos
+
+    def append_token(self, k_new: np.ndarray, v_new: np.ndarray):
+        """Route one new token's KV: rolling buffer, flushing full groups to
+        disk (and reporting the flushed group for K_lr append)."""
+        flushed = self.rolling.append(k_new, v_new)
+        if flushed is not None:
+            k_g, v_g = flushed
+            self.store.append_group(self.layer, k_g, v_g)
+        return flushed

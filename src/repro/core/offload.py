@@ -1,0 +1,283 @@
+"""Disk tier for the KV cache (KVSwap §2.3, §3.4).
+
+Two pieces:
+
+* :class:`DiskSpec` — an analytic timing model of a block-granular storage
+  device (NVMe / eMMC / UFS).  The container's physical disk is neither a
+  Jetson NVMe nor an eMMC part, so throughput numbers in the benchmarks are
+  *modeled* from this spec, calibrated against the paper's Fig. 2 bandwidth
+  curve (effective BW < 6 % of peak at 512 B requests, approaching peak for
+  >= 256 KiB requests).  Correctness always uses the real store below.
+
+* :class:`KVDiskStore` — a real, file-backed store for the full KV cache.
+  Layout is **group-contiguous**: one KV group (G consecutive tokens, K and V,
+  all KV heads) is one contiguous byte range, so loading a group is a single
+  sequential read — exactly the read-amplification-aware access pattern the
+  paper orchestrates (§3.3).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import os
+import tempfile
+from typing import Iterable, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DiskSpec:
+    """Analytic model of a block-granular storage device.
+
+    Time for one request of ``n`` bytes::
+
+        t = request_latency + ceil(n / page_bytes) * page_bytes / peak_bw
+
+    ``page_bytes`` models read amplification: the controller always reads
+    whole NAND pages (§2.3, [27, 45]).  ``request_latency`` is the effective
+    per-request overhead at the benchmark queue depth.
+    """
+
+    name: str
+    peak_bw: float          # bytes / second
+    page_bytes: int         # NAND page / min transfer unit
+    request_latency: float  # seconds per request (effective, at QD)
+
+    def read_time(self, n_bytes: int, n_requests: int = 1) -> float:
+        """Modeled wall time to service ``n_requests`` totaling ``n_bytes``."""
+        if n_bytes <= 0:
+            return 0.0
+        pages = 0
+        per_req = n_bytes / max(n_requests, 1)
+        pages = n_requests * math.ceil(per_req / self.page_bytes)
+        return n_requests * self.request_latency + pages * self.page_bytes / self.peak_bw
+
+    def write_time(self, n_bytes: int, n_requests: int = 1) -> float:
+        # Writes are buffered by the page cache in practice; model at read cost.
+        return self.read_time(n_bytes, n_requests)
+
+    def effective_bw(self, block_bytes: int) -> float:
+        """Effective bandwidth for a stream of ``block_bytes`` requests (Fig. 2)."""
+        return block_bytes / self.read_time(block_bytes, 1)
+
+
+# Calibrated to the paper: NVMe peak 1.8 GB/s, eMMC peak 250 MB/s; at 512 B
+# requests both drop below 6 % of peak (Fig. 2).
+NVME = DiskSpec("nvme", peak_bw=1.8e9, page_bytes=4096, request_latency=3.5e-6)
+EMMC = DiskSpec("emmc", peak_bw=250e6, page_bytes=4096, request_latency=20e-6)
+DISKS = {"nvme": NVME, "emmc": EMMC}
+
+
+class IOAccountant:
+    """Accumulates modeled I/O time + byte/request counters per decode step."""
+
+    def __init__(self, spec: DiskSpec):
+        self.spec = spec
+        self.reset()
+
+    def reset(self) -> None:
+        self.read_bytes = 0
+        self.read_requests = 0
+        self.write_bytes = 0
+        self.write_requests = 0
+        self.read_seconds = 0.0
+        self.write_seconds = 0.0
+
+    def charge_read(self, n_bytes: int, n_requests: int = 1) -> float:
+        t = self.spec.read_time(n_bytes, n_requests)
+        self.read_bytes += n_bytes
+        self.read_requests += n_requests
+        self.read_seconds += t
+        return t
+
+    def charge_write(self, n_bytes: int, n_requests: int = 1) -> float:
+        t = self.spec.write_time(n_bytes, n_requests)
+        self.write_bytes += n_bytes
+        self.write_requests += n_requests
+        self.write_seconds += t
+        return t
+
+    def snapshot(self) -> dict:
+        return {
+            "read_bytes": self.read_bytes,
+            "read_requests": self.read_requests,
+            "write_bytes": self.write_bytes,
+            "write_requests": self.write_requests,
+            "read_seconds": self.read_seconds,
+            "write_seconds": self.write_seconds,
+        }
+
+
+class KVDiskStore:
+    """File-backed full KV cache with group-contiguous layout.
+
+    Logical shape: ``[layers, batch, max_groups, G, 2, H_kv, d]`` where axis 4
+    is (K, V).  The innermost 4 axes of one ``(layer, batch, group)`` index are
+    contiguous on disk, so one group load is one sequential read of
+    ``group_nbytes`` bytes.
+    """
+
+    def __init__(
+        self,
+        *,
+        n_layers: int,
+        batch: int,
+        max_groups: int,
+        group_size: int,
+        n_kv_heads: int,
+        head_dim: int,
+        dtype=np.float32,
+        path: str | None = None,
+        accountant: IOAccountant | None = None,
+        quant_bits: int = 0,
+    ):
+        """``quant_bits=8`` stores int8 per-group-scaled KV on disk (paper §7
+        "low-bit KV" combination): group reads shrink ~dtype_size×, trading a
+        small dequantization error.  Scales live in memory (4 B/group)."""
+        self.n_layers = n_layers
+        self.batch = batch
+        self.max_groups = max_groups
+        self.group_size = group_size
+        self.n_kv_heads = n_kv_heads
+        self.head_dim = head_dim
+        self.dtype = np.dtype(dtype)
+        self.accountant = accountant
+        if quant_bits not in (0, 8):
+            raise ValueError("quant_bits must be 0 (raw) or 8 (int8)")
+        self.quant_bits = quant_bits
+        self._store_dtype = np.dtype(np.int8) if quant_bits == 8 else self.dtype
+        self._scales = (np.zeros((n_layers, batch, max_groups), np.float32)
+                        if quant_bits == 8 else None)
+
+        shape = (n_layers, batch, max_groups, group_size, 2, n_kv_heads, head_dim)
+        if path is None:
+            fd, path = tempfile.mkstemp(prefix="kvswap_store_", suffix=".bin")
+            os.close(fd)
+            self._owns_file = True
+        else:
+            self._owns_file = False
+        self.path = path
+        self._mm = np.memmap(path, dtype=self._store_dtype, mode="w+", shape=shape)
+        # number of groups currently valid on disk, per (layer, batch)
+        self.n_groups = np.zeros((n_layers, batch), dtype=np.int64)
+
+    # -- int8 helpers -------------------------------------------------------
+    def _quant(self, block: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """``block [..., G, 2, H, d]`` → (int8 block, scales [...])."""
+        amax = np.abs(block).reshape(*block.shape[:-4], -1).max(axis=-1)
+        scale = np.maximum(amax / 127.0, 1e-12)
+        q = np.clip(np.rint(block / scale[..., None, None, None, None]), -127, 127)
+        return q.astype(np.int8), scale.astype(np.float32)
+
+    def _dequant(self, q: np.ndarray, scale: np.ndarray) -> np.ndarray:
+        return (q.astype(np.float32)
+                * scale[..., None, None, None, None]).astype(self.dtype)
+
+    # -- geometry ---------------------------------------------------------
+    @property
+    def group_nbytes(self) -> int:
+        return (self.group_size * 2 * self.n_kv_heads * self.head_dim
+                * self._store_dtype.itemsize)
+
+    @property
+    def entry_nbytes(self) -> int:
+        """One token's K+V across heads — the paper's 'KV entry'."""
+        return 2 * self.n_kv_heads * self.head_dim * self._store_dtype.itemsize
+
+    def total_bytes_on_disk(self) -> int:
+        return int(self.n_groups.sum()) * self.group_nbytes
+
+    # -- writes -----------------------------------------------------------
+    def write_prefill(self, layer: int, k: np.ndarray, v: np.ndarray) -> int:
+        """Write the prefill KV for ``layer``; returns number of full groups.
+
+        ``k, v``: ``[batch, seq, H_kv, d]``.  Only full groups are written;
+        the trailing ``seq % G`` tokens stay in the rolling buffer (§3.4.1).
+        """
+        b, seq = k.shape[0], k.shape[1]
+        g = self.group_size
+        ng = seq // g
+        if ng > 0:
+            kg = k[:, : ng * g].reshape(b, ng, g, self.n_kv_heads, self.head_dim)
+            vg = v[:, : ng * g].reshape(b, ng, g, self.n_kv_heads, self.head_dim)
+            block = np.stack([kg, vg], axis=3)  # [B, ng, G, 2, H, d]
+            if self.quant_bits == 8:
+                qblk, scale = self._quant(block)
+                self._mm[layer, :, :ng] = qblk
+                self._scales[layer, :, :ng] = scale
+            else:
+                self._mm[layer, :, :ng] = block.astype(self.dtype)
+            if self.accountant is not None:
+                # Sequential layer-sized write, one request per batch row.
+                self.accountant.charge_write(b * ng * self.group_nbytes, b)
+        self.n_groups[layer, :] = ng
+        return ng
+
+    def append_group(self, layer: int, k_group: np.ndarray, v_group: np.ndarray) -> None:
+        """Append one full group per batch row (rolling-buffer flush).
+
+        ``k_group, v_group``: ``[batch, G, H_kv, d]``.
+        """
+        for bi in range(self.batch):
+            gi = int(self.n_groups[layer, bi])
+            if gi >= self.max_groups:
+                raise RuntimeError(f"KVDiskStore overflow: layer={layer} batch={bi}")
+            block = np.stack([k_group[bi], v_group[bi]], axis=1)  # [G, 2, H, d]
+            if self.quant_bits == 8:
+                qblk, scale = self._quant(block)
+                self._mm[layer, bi, gi] = qblk
+                self._scales[layer, bi, gi] = scale
+            else:
+                self._mm[layer, bi, gi] = block.astype(self.dtype)
+            self.n_groups[layer, bi] = gi + 1
+        if self.accountant is not None:
+            self.accountant.charge_write(self.batch * self.group_nbytes, self.batch)
+
+    # -- reads ------------------------------------------------------------
+    def read_groups(self, layer: int, batch_idx: int, group_ids: Sequence[int]) -> tuple[np.ndarray, np.ndarray]:
+        """Read selected groups for one sequence.
+
+        Returns ``(k, v)`` each ``[n_sel, G, H_kv, d]``.  Each group is one
+        contiguous read; *adjacent* requested groups coalesce into a single
+        larger request (the runtime sorts its miss list — §3.4.4).
+        """
+        ids = np.asarray(sorted(int(g) for g in group_ids), dtype=np.int64)
+        n = len(ids)
+        if n == 0:
+            empty = np.empty((0, self.group_size, self.n_kv_heads, self.head_dim), self.dtype)
+            return empty, empty.copy()
+        blk = self._mm[layer, batch_idx, ids]  # [n, G, 2, H_kv, d] (fancy index -> copy)
+        if self.quant_bits == 8:
+            blk = self._dequant(blk, self._scales[layer, batch_idx, ids])
+        if self.accountant is not None:
+            runs = 1 + int(np.sum(np.diff(ids) != 1))
+            self.accountant.charge_read(n * self.group_nbytes, runs)
+        return blk[:, :, 0], blk[:, :, 1]
+
+    def read_all(self, layer: int) -> tuple[np.ndarray, np.ndarray]:
+        """FlexGen-style full-layer restore: one big sequential read per row."""
+        ng = int(self.n_groups[layer].min())
+        blk = np.asarray(self._mm[layer, :, :ng])  # [B, ng, G, 2, Hkv, d]
+        if self.quant_bits == 8:
+            blk = self._dequant(blk, self._scales[layer, :, :ng])
+        if self.accountant is not None:
+            self.accountant.charge_read(self.batch * ng * self.group_nbytes, self.batch)
+        k = blk[:, :, :, 0].reshape(self.batch, ng * self.group_size, self.n_kv_heads, self.head_dim)
+        v = blk[:, :, :, 1].reshape(self.batch, ng * self.group_size, self.n_kv_heads, self.head_dim)
+        return k, v
+
+    # -- lifecycle --------------------------------------------------------
+    def close(self) -> None:
+        mm, self._mm = self._mm, None
+        if mm is not None:
+            del mm
+        if self._owns_file and os.path.exists(self.path):
+            os.unlink(self.path)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

@@ -1,0 +1,146 @@
+"""Grouped critical-KV-entry prediction (KVSwap §3.3, Eq. 1).
+
+Given the *previous* layer's input ``x`` (cross-layer input similarity — the
+same observation InfiniGen exploits), the predictor:
+
+1. projects ``x`` through layer *i*'s Q projection → ``Q ∈ [B, H, d]``;
+2. forms low-rank queries ``Q_h A_{q(h)}`` per head (Eq. 1), where ``q(h)``
+   maps each query head to its shared GQA K head;
+3. scores every cached token against the compressed K cache:
+   ``score_h = (Q_h A_{q(h)}) K_lr^T``;
+4. **sums scores across heads** (head aggregation) → one importance score per
+   token;
+5. reduce-max within each group of ``G`` consecutive tokens;
+6. top-``M`` groups are selected for preloading.
+
+Unlike InfiniGen (per-head, per-token index selection) this operates on a
+head-unified low-rank representation and at *group* granularity, matching
+block-read storage characteristics.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lowrank import LowRankAdapter
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class PredictorConfig:
+    group_size: int          # G
+    n_select: int            # M  (number of groups to preload)
+    n_heads: int             # H  (query heads)
+    n_kv_heads: int          # H_k
+
+    @property
+    def heads_per_kv(self) -> int:
+        return self.n_heads // self.n_kv_heads
+
+
+def lowrank_queries(
+    q: jax.Array,                 # [B, H, d]
+    adapter: LowRankAdapter,
+    n_heads: int,
+) -> jax.Array:
+    """``Q_h A_{q(h)}`` for every query head → ``[B, H, r]``."""
+    per_head_a = adapter.per_head.astype(q.dtype)      # [H_k, d, r]
+    heads_per_kv = n_heads // adapter.n_kv_heads
+    # q(h) = h // heads_per_kv  (GQA head → shared K head)
+    a_for_head = jnp.repeat(per_head_a, heads_per_kv, axis=0)  # [H, d, r]
+    return jnp.einsum("bhd,hdr->bhr", q, a_for_head)
+
+
+def token_scores(
+    q_lr: jax.Array,              # [B, H, r]
+    k_lr: jax.Array,              # [B, N, r]
+) -> jax.Array:
+    """Approximate attention scores, summed over heads → ``[B, N]``."""
+    scores = jnp.einsum("bhr,bnr->bhn", q_lr, k_lr)
+    return scores.sum(axis=1)
+
+
+def group_scores(scores: jax.Array, group_size: int, valid_len: jax.Array | int | None = None) -> jax.Array:
+    """Reduce-max over groups of ``G`` consecutive tokens → ``[B, N // G]``.
+
+    Tokens beyond ``valid_len`` (per batch or scalar) are masked to -inf.
+    ``N`` must be a multiple of ``G`` (callers pad).
+    """
+    b, n = scores.shape
+    g = group_size
+    if n % g:
+        raise ValueError(f"token count {n} not a multiple of group size {g}")
+    if valid_len is not None:
+        pos = jnp.arange(n)[None, :]
+        vl = jnp.asarray(valid_len)
+        if vl.ndim == 0:
+            vl = vl[None]
+        scores = jnp.where(pos < vl[:, None], scores, NEG_INF)
+    return scores.reshape(b, n // g, g).max(axis=-1)
+
+
+def select_groups(gscores: jax.Array, n_select: int) -> tuple[jax.Array, jax.Array]:
+    """Top-``M`` group ids by representative score.
+
+    Returns ``(ids [B, M], mask [B, M])`` — mask is False where the score was
+    -inf (fewer than M valid groups exist); ids for masked slots are 0.
+    """
+    m = min(n_select, gscores.shape[-1])
+    top_scores, ids = jax.lax.top_k(gscores, m)
+    mask = top_scores > NEG_INF / 2
+    return jnp.where(mask, ids, 0), mask
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def predict_groups(
+    x: jax.Array,                 # [B, d_model] — previous layer's input
+    wq: jax.Array,                # [d_model, H*d] — layer i's Q projection
+    adapter_a: jax.Array,         # [H_k*d, r]
+    k_lr: jax.Array,              # [B, N, r] (N padded to multiple of G)
+    valid_len: jax.Array,         # [B] number of valid tokens in k_lr
+    cfg: PredictorConfig,
+) -> tuple[jax.Array, jax.Array]:
+    """End-to-end jitted prediction: returns ``(group_ids [B, M], mask)``."""
+    b = x.shape[0]
+    d = adapter_a.shape[0] // cfg.n_kv_heads
+    q = (x @ wq).reshape(b, cfg.n_heads, d)
+    adapter = LowRankAdapter(a=adapter_a, n_kv_heads=cfg.n_kv_heads, head_dim=d)
+    q_lr = lowrank_queries(q, adapter, cfg.n_heads)
+    scores = token_scores(q_lr, k_lr)
+    gs = group_scores(scores, cfg.group_size, valid_len)
+    return select_groups(gs, cfg.n_select)
+
+
+def exact_group_scores(
+    q: jax.Array,                 # [B, H, d] — *true* query
+    k: jax.Array,                 # [B, N, H_k, d] — full K cache
+    group_size: int,
+    valid_len: jax.Array | int | None = None,
+) -> jax.Array:
+    """Oracle group scores from the full K cache (test/eval reference)."""
+    b, h, d = q.shape
+    hk = k.shape[2]
+    q_g = q.reshape(b, hk, h // hk, d)
+    scores = jnp.einsum("bkgd,bnkd->bkgn", q_g, k).sum(axis=(1, 2))  # head-sum
+    return group_scores(scores, group_size, valid_len)
+
+
+def recall_at_m(pred_ids: jax.Array, oracle_ids: jax.Array, mask: jax.Array) -> float:
+    """Fraction of oracle top-M groups recovered by the predictor."""
+    hits = 0
+    total = 0
+    pred = jax.device_get(pred_ids)
+    orac = jax.device_get(oracle_ids)
+    msk = jax.device_get(mask)
+    for bi in range(pred.shape[0]):
+        p = set(pred[bi][msk[bi]].tolist())
+        o = set(orac[bi][msk[bi]].tolist())
+        if o:
+            hits += len(p & o)
+            total += len(o)
+    return hits / max(total, 1)

@@ -1,0 +1,113 @@
+"""Reuse buffer: software cache of recently accessed KV groups (KVSwap §3.4.3).
+
+Adjacent decode steps share 75-81 % of their critical groups (paper Fig. 8 /
+Tab. 5), so retaining loaded groups in fixed memory slots avoids most disk
+re-reads.  Implementation matches the paper: a fixed set of slots each holding
+one group, a slot table mapping slot → group id, FIFO replacement.
+
+Slots are keyed per (layer, batch row); capacity ``C`` counts groups.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class ReuseStats:
+    hits: int = 0
+    misses: int = 0
+
+    @property
+    def ratio(self) -> float:
+        tot = self.hits + self.misses
+        return self.hits / tot if tot else 0.0
+
+
+class ReuseBuffer:
+    """FIFO cache of KV groups for one layer of one batched sequence set."""
+
+    def __init__(self, *, batch: int, capacity: int, group_size: int, n_kv_heads: int, head_dim: int, dtype=np.float32):
+        self.batch = batch
+        self.capacity = capacity
+        self.group_size = group_size
+        # slot storage: [B, C, G, 2, H_kv, d]
+        self.slots = np.zeros((batch, capacity, group_size, 2, n_kv_heads, head_dim), dtype=dtype)
+        # slot_table[b][slot] = group id or -1
+        self.slot_table = np.full((batch, capacity), -1, dtype=np.int64)
+        self._fifo: list[collections.deque] = [collections.deque() for _ in range(batch)]
+        self._index: list[dict[int, int]] = [dict() for _ in range(batch)]  # gid -> slot
+        self._free: list[list[int]] = [list(range(capacity - 1, -1, -1)) for _ in range(batch)]
+        self.stats = ReuseStats()
+
+    @property
+    def nbytes(self) -> int:
+        return self.slots.nbytes + self.slot_table.nbytes
+
+    def lookup(self, batch_idx: int, group_ids) -> tuple[list[int], list[int]]:
+        """Split requested ids into (hit ids, miss ids); updates hit stats."""
+        idx = self._index[batch_idx]
+        hits = [g for g in group_ids if g in idx]
+        misses = [g for g in group_ids if g not in idx]
+        self.stats.hits += len(hits)
+        self.stats.misses += len(misses)
+        return hits, misses
+
+    def get(self, batch_idx: int, group_id: int) -> np.ndarray:
+        """Return the slot contents ``[G, 2, H_kv, d]`` for a resident group."""
+        slot = self._index[batch_idx][group_id]
+        return self.slots[batch_idx, slot]
+
+    def insert(self, batch_idx: int, group_id: int, kv_group: np.ndarray,
+               protected: set | None = None) -> int | None:
+        """Insert a loaded group (``[G, 2, H_kv, d]``); FIFO-evicts if full.
+
+        ``protected`` pins the current step's working set: those resident
+        groups are never chosen as eviction victims (the preload buffer is
+        merged into the reuse buffer — paper App. A.2).  Returns the slot
+        index, or ``None`` if insertion would require evicting a protected
+        group (caller stages the group transiently instead).
+        """
+        idx = self._index[batch_idx]
+        fifo = self._fifo[batch_idx]
+        if group_id in idx:  # refresh in place (idempotent insert)
+            slot = idx[group_id]
+            self.slots[batch_idx, slot] = kv_group
+            return slot
+        free = self._free[batch_idx]
+        if free:
+            slot = free.pop()
+        else:
+            victim = None
+            if protected:
+                for cand in fifo:
+                    if cand not in protected:
+                        victim = cand
+                        break
+                if victim is None:
+                    return None
+                fifo.remove(victim)
+            else:
+                victim = fifo.popleft()
+            slot = idx.pop(victim)
+            self.slot_table[batch_idx, slot] = -1
+        idx[group_id] = slot
+        fifo.append(group_id)
+        self.slot_table[batch_idx, slot] = group_id
+        self.slots[batch_idx, slot] = kv_group
+        return slot
+
+    def invalidate(self, batch_idx: int, group_id: int) -> None:
+        """Drop a group (e.g. its on-disk contents were superseded)."""
+        idx = self._index[batch_idx]
+        if group_id in idx:
+            slot = idx.pop(group_id)
+            self.slot_table[batch_idx, slot] = -1
+            self._fifo[batch_idx].remove(group_id)
+            self._free[batch_idx].append(slot)
+
+    def resident(self, batch_idx: int) -> set[int]:
+        return set(self._index[batch_idx].keys())

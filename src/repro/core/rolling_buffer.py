@@ -1,0 +1,56 @@
+"""Rolling buffer (RB) for freshly decoded KV entries (KVSwap §3.4.1).
+
+Critical entries are predicted at *group* granularity, so the importance of
+a new token cannot be assessed until its group completes.  The RB keeps the
+most recent ``< G`` tokens in memory; once a full group of ``G`` accumulates
+it is flushed to disk and its keys appended to the compressed K cache.
+Disabling the RB drops accuracy by >= 29 % (paper Tab. 3, App. B): new tokens
+must participate in attention immediately.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+class RollingBuffer:
+    """Per-layer rolling buffer over a shared batch. Host-side (numpy)."""
+
+    def __init__(self, *, batch: int, group_size: int, n_kv_heads: int, head_dim: int, dtype=np.float32):
+        self.batch = batch
+        self.group_size = group_size
+        self.k = np.zeros((batch, group_size, n_kv_heads, head_dim), dtype=dtype)
+        self.v = np.zeros_like(self.k)
+        self.fill = 0  # tokens currently held (same for all batch rows)
+
+    @property
+    def nbytes(self) -> int:
+        return self.k.nbytes + self.v.nbytes
+
+    def append(self, k_new: np.ndarray, v_new: np.ndarray) -> tuple[np.ndarray, np.ndarray] | None:
+        """Append one token per batch row (``[B, H_kv, d]``).
+
+        Returns the completed ``(k_group, v_group)`` of shape
+        ``[B, G, H_kv, d]`` when the buffer fills, else ``None``.
+        """
+        self.k[:, self.fill] = k_new
+        self.v[:, self.fill] = v_new
+        self.fill += 1
+        if self.fill == self.group_size:
+            full_k, full_v = self.k.copy(), self.v.copy()
+            self.fill = 0
+            return full_k, full_v
+        return None
+
+    def seed(self, k_tail: np.ndarray, v_tail: np.ndarray) -> None:
+        """Seed with the prefill tail (``seq % G`` tokens): ``[B, t, H_kv, d]``."""
+        t = k_tail.shape[1]
+        if t >= self.group_size:
+            raise ValueError("tail longer than a group")
+        self.k[:, :t] = k_tail
+        self.v[:, :t] = v_tail
+        self.fill = t
+
+    def current(self) -> tuple[np.ndarray, np.ndarray]:
+        """Valid in-flight entries: ``[B, fill, H_kv, d]`` each."""
+        return self.k[:, : self.fill], self.v[:, : self.fill]

@@ -1,0 +1,3 @@
+from repro.kernels.ops import gather_attention, lowrank_group_scores
+
+__all__ = ["lowrank_group_scores", "gather_attention"]

@@ -1,0 +1,118 @@
+"""Pallas kernel: flash-decode attention over gathered KV groups.
+
+This is the attention the KVSwap runtime hands its heterogeneous KV view to
+(reuse-buffer slots + freshly loaded groups + rolling buffer, flattened by
+the mapping table into ``[B, H_kv, S_sel, d]`` + a validity mask).  One query
+token per sequence, online-softmax accumulation across ``S_sel`` tiles so the
+selected KV streams through VMEM exactly once.
+
+Layout note: KV comes in head-major ``[B, H_kv, S, d]`` so each (kv-head,
+token-tile) block is a contiguous ``[T, d]`` MXU operand — the wrapper in
+ops.py transposes from the runtime's token-major layout.
+
+Validated in ``interpret=True`` mode against ``ref.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, mask_ref, out_ref,
+                 m_scr, l_scr, acc_scr, *, block_t: int, rep: int, n_tiles: int):
+    """One (batch, token-tile) program; scratch carries the online softmax.
+
+    q_ref   [1, H, d]
+    k_ref   [1, H_kv, T, d]
+    v_ref   [1, H_kv, T, d]
+    mask_ref[1, T] (int32; nonzero = valid)
+    out_ref [1, H, d]
+    scratch: m [H, 1], l [H, 1], acc [H, d]  (fp32)
+    """
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)                 # [H, d]
+    k = k_ref[0].astype(jnp.float32)                 # [Hk, T, d]
+    v = v_ref[0].astype(jnp.float32)
+    hk, t, d = k.shape
+    h = q.shape[0]
+    scale = 1.0 / (d ** 0.5)
+
+    q3 = q.reshape(hk, rep, d)
+    # [Hk, rep, d] x [Hk, T, d] -> [Hk, rep, T]
+    s = jax.lax.dot_general(
+        q3, k, (((2,), (2,)), ((0,), (0,))), preferred_element_type=jnp.float32)
+    s = s.reshape(h, t) * scale
+    msk = mask_ref[0]                                # [T]
+    s = jnp.where(msk[None, :] != 0, s, NEG)
+
+    m_prev = m_scr[:, 0]                             # [H]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    corr = jnp.exp(m_prev - m_new)                   # [H]
+    p = jnp.exp(s - m_new[:, None])                  # [H, T]
+    # zero out fully-masked rows' contributions (exp(NEG - NEG) traps)
+    p = jnp.where(msk[None, :] != 0, p, 0.0)
+    l_new = l_scr[:, 0] * corr + p.sum(axis=1)
+
+    p3 = p.reshape(hk, rep, t)
+    # [Hk, rep, T] x [Hk, T, d] -> [Hk, rep, d]
+    pv = jax.lax.dot_general(
+        p3, v, (((2,), (1,)), ((0,), (0,))), preferred_element_type=jnp.float32)
+    acc_scr[...] = acc_scr[...] * corr[:, None] + pv.reshape(h, d)
+    m_scr[...] = m_new[:, None]
+    l_scr[...] = l_new[:, None]
+
+    @pl.when(j == n_tiles - 1)
+    def _fin():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        out_ref[0] = (acc_scr[...] / denom).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
+def gather_attention_pallas(
+    q: jax.Array,     # [B, H, d]
+    k: jax.Array,     # [B, H_kv, S, d]
+    v: jax.Array,     # [B, H_kv, S, d]
+    mask: jax.Array,  # [B, S] bool
+    *,
+    block_t: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    b, h, d = q.shape
+    hk, s = k.shape[1], k.shape[2]
+    if s % block_t:
+        raise ValueError(f"S={s} must tile by block_t={block_t}")
+    rep = h // hk
+    n_tiles = s // block_t
+    kernel = functools.partial(_attn_kernel, block_t=block_t, rep=rep, n_tiles=n_tiles)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, n_tiles),
+        in_specs=[
+            pl.BlockSpec((1, h, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, hk, block_t, d), lambda i, j: (i, 0, j, 0)),
+            pl.BlockSpec((1, hk, block_t, d), lambda i, j: (i, 0, j, 0)),
+            pl.BlockSpec((1, block_t), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, h, d), lambda i, j: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((h, 1), jnp.float32),
+            pltpu.VMEM((h, 1), jnp.float32),
+            pltpu.VMEM((h, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, mask.astype(jnp.int32))

@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for the Pallas kernels (the allclose reference)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def lowrank_group_scores_ref(q_lr: jax.Array, k_lr: jax.Array, valid_len: jax.Array,
+                             group_size: int) -> jax.Array:
+    """Eq. 1 scoring + head-sum + per-group reduce-max.
+
+    q_lr [B, H, r]; k_lr [B, N, r]; valid_len [B] → [B, N // G] (fp32).
+    """
+    scores = jnp.einsum("bhr,bnr->bn", q_lr.astype(jnp.float32),
+                        k_lr.astype(jnp.float32))
+    b, n = scores.shape
+    pos = jnp.arange(n)[None, :]
+    scores = jnp.where(pos < valid_len[:, None], scores, NEG)
+    return scores.reshape(b, n // group_size, group_size).max(axis=-1)
+
+
+def gather_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         mask: jax.Array) -> jax.Array:
+    """Masked decode attention over a gathered KV set.
+
+    q [B, H, d]; k, v [B, H_kv, S, d]; mask [B, S] bool → [B, H, d] (fp32).
+    """
+    b, h, d = q.shape
+    hk = k.shape[1]
+    rep = h // hk
+    qf = q.astype(jnp.float32).reshape(b, hk, rep, d)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bkrd,bktd->bkrt", qf, kf) / jnp.sqrt(d)
+    s = jnp.where(mask[:, None, None, :], s, NEG)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkrt,bktd->bkrd", w, vf)
+    return o.reshape(b, h, d)
+
+
+def ssd_chunk_ref(xh, bm, cm, dt, cum):
+    """Intra-chunk SSD oracle.  xh [B,nc,Q,H,P]; bm/cm [B,nc,Q,N];
+    dt/cum [B,nc,Q,H] → [B,nc,Q,H,P] (fp32)."""
+    xh = xh.astype(jnp.float32)
+    bm = bm.astype(jnp.float32)
+    cm = cm.astype(jnp.float32)
+    dt = dt.astype(jnp.float32)
+    cum = cum.astype(jnp.float32)
+    q = xh.shape[2]
+    li = cum[:, :, :, None, :]
+    lj = cum[:, :, None, :, :]
+    causal = jnp.tril(jnp.ones((q, q), bool))
+    decay = jnp.exp(jnp.where(causal[None, None, :, :, None], li - lj, -jnp.inf))
+    cb = jnp.einsum("bnis,bnjs->bnij", cm, bm)
+    w = cb[..., None] * decay * dt[:, :, None, :, :]
+    return jnp.einsum("bnijh,bnjhp->bnihp", w, xh)

@@ -1,0 +1,25 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing never touches jax
+device state.  Single pod: 16×16 = 256 chips (data × model).  Multi-pod:
+2×16×16 = 512 chips (pod × data × model).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_smoke_mesh(n_devices: int | None = None):
+    """Tiny mesh over whatever devices exist (tests / examples)."""
+    n = n_devices or len(jax.devices())
+    return jax.make_mesh(
+        (1, n), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)

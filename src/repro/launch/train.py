@@ -1,0 +1,65 @@
+"""Training launcher.
+
+Local (CPU/devbox) run on a reduced config:
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3-8b --smoke \
+        --steps 50 --batch 8 --seq-len 128
+
+On a real pod, drop ``--smoke`` and point JAX at the TPU runtime; the mesh +
+sharding logic is the same code path the dry-run validates.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import save_pytree
+from repro.configs import registry
+from repro.data import SyntheticLMStream
+from repro.training.optim import AdamWConfig
+from repro.training.train import train_loop
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b", choices=registry.list_archs())
+    ap.add_argument("--smoke", action="store_true", help="reduced config (CPU)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--checkpoint", default="")
+    args = ap.parse_args()
+
+    cfg = registry.smoke(args.arch) if args.smoke else registry.get(args.arch)
+    params = registry.init_params(jax.random.PRNGKey(0), cfg)
+
+    if registry.is_whisper(cfg):
+        from repro.models import whisper as W
+        frames = jax.random.normal(
+            jax.random.PRNGKey(1), (args.batch, cfg.enc_frames, cfg.d_model))
+
+        def forward(p, c, tokens):
+            return W.decoder_forward(p, c, tokens, W.encode(p, c, frames))
+    else:
+        from repro.models.transformer import forward
+
+    stream = SyntheticLMStream(cfg.vocab_size, seed=0)
+    cb = None
+    if args.checkpoint:
+        cb = lambda state, step: save_pytree(
+            f"{args.checkpoint}/step_{step}.npz", state.params)
+    state, hist = train_loop(params, forward, cfg, stream, steps=args.steps,
+                             batch=args.batch, seq_len=args.seq_len,
+                             opt_cfg=AdamWConfig(lr=args.lr), checkpoint_cb=cb)
+    if args.checkpoint:
+        save_pytree(f"{args.checkpoint}/final.npz", state.params)
+        print(f"saved {args.checkpoint}/final.npz")
+    print(f"final loss: {hist[-1]['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,301 @@
+"""Shared building blocks: norms, RoPE, GQA attention, SwiGLU, MoE.
+
+Pure-functional JAX: params are plain dicts of arrays; every layer ships an
+``init_*`` and an ``apply``-style function.  Sharding is applied externally by
+partition rules over param path names (repro.sharding).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+
+def init_rmsnorm(dim: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm(p, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def init_layernorm(dim: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def layernorm(p, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(axis=-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"] + p["bias"]).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 500000.0) -> jax.Array:
+    """Rotary embedding.  ``x: [..., seq, heads, d]`` (or ``[..., heads, d]``
+    with matching positions), ``positions: [..., seq]``."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                        # [d/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., seq, d/2]
+    cos = jnp.cos(angles)[..., None, :]                 # broadcast over heads
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# initializers
+# --------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype=jnp.float32, scale: float | None = None):
+    fan_in = shape[0]
+    s = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return jax.random.normal(key, shape, dtype) * s
+
+
+# --------------------------------------------------------------------------
+# GQA attention
+# --------------------------------------------------------------------------
+
+def init_attention(key, *, d_model: int, n_heads: int, n_kv_heads: int, head_dim: int,
+                   qk_norm: bool = False, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d_model, n_heads * head_dim), dtype),
+        "wk": dense_init(ks[1], (d_model, n_kv_heads * head_dim), dtype),
+        "wv": dense_init(ks[2], (d_model, n_kv_heads * head_dim), dtype),
+        "wo": dense_init(ks[3], (n_heads * head_dim, d_model), dtype),
+    }
+    if qk_norm:
+        p["q_norm"] = init_rmsnorm(head_dim, dtype)
+        p["k_norm"] = init_rmsnorm(head_dim, dtype)
+    return p
+
+
+def attention_qkv(p, x: jax.Array, positions: jax.Array, *, n_heads: int,
+                  n_kv_heads: int, head_dim: int, rope_theta: float, qk_norm: bool):
+    """Project + (qk-)norm + RoPE.  ``x: [B, S, D]`` → q [B,S,H,d], k/v [B,S,Hk,d]."""
+    b, s, _ = x.shape
+    q = (x @ p["wq"]).reshape(b, s, n_heads, head_dim)
+    k = (x @ p["wk"]).reshape(b, s, n_kv_heads, head_dim)
+    v = (x @ p["wv"]).reshape(b, s, n_kv_heads, head_dim)
+    if qk_norm:
+        q = rmsnorm(p["q_norm"], q)
+        k = rmsnorm(p["k_norm"], k)
+    q = apply_rope(q, positions, rope_theta)
+    k = apply_rope(k, positions, rope_theta)
+    return q, k, v
+
+
+def repeat_kv(x: jax.Array, n_rep: int) -> jax.Array:
+    """[..., Hk, d] -> [..., Hk*n_rep, d]"""
+    if n_rep == 1:
+        return x
+    return jnp.repeat(x, n_rep, axis=-2)
+
+
+def causal_attention(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Full causal attention.  q [B,S,H,d], k/v [B,S,Hk,d] → [B,S,H,d]."""
+    b, s, h, d = q.shape
+    hk = k.shape[2]
+    kq = repeat_kv(k, h // hk)
+    vq = repeat_kv(v, h // hk)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, kq) / jnp.sqrt(d).astype(q.dtype)
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    scores = jnp.where(mask[None, None], scores, jnp.finfo(scores.dtype).min)
+    w = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", w, vq)
+
+
+def bidirectional_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                            mask: jax.Array | None = None) -> jax.Array:
+    """Encoder / cross attention.  q [B,Sq,H,d], k/v [B,Sk,Hk,d]."""
+    h = q.shape[2]
+    hk = k.shape[2]
+    kq = repeat_kv(k, h // hk)
+    vq = repeat_kv(v, h // hk)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, kq) / jnp.sqrt(q.shape[-1]).astype(q.dtype)
+    if mask is not None:
+        scores = jnp.where(mask[:, None, None, :], scores, jnp.finfo(scores.dtype).min)
+    w = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", w, vq)
+
+
+# Route decode attention through the Pallas flash-decode kernel
+# (repro.kernels.gather_attention).  interpret=True on CPU; on TPU flip
+# PALLAS_INTERPRET to False.  Toggled per-call-site via set_use_pallas.
+USE_PALLAS_DECODE = False
+PALLAS_INTERPRET = True
+
+
+def set_use_pallas(enabled: bool, *, interpret: bool = True) -> None:
+    global USE_PALLAS_DECODE, PALLAS_INTERPRET
+    USE_PALLAS_DECODE = enabled
+    PALLAS_INTERPRET = interpret
+
+
+def decode_attention(q: jax.Array, k_ctx: jax.Array, v_ctx: jax.Array,
+                     ctx_mask: jax.Array, k_new: jax.Array, v_new: jax.Array) -> jax.Array:
+    """One-token decode over an assembled (masked) context plus self.
+
+    q [B,H,d]; k_ctx/v_ctx [B,N,Hk,d]; ctx_mask [B,N]; k_new/v_new [B,Hk,d].
+    Returns [B,H,d].
+    """
+    b, h, d = q.shape
+    hk = k_ctx.shape[2]
+    k_all = jnp.concatenate([k_ctx, k_new[:, None]], axis=1)
+    v_all = jnp.concatenate([v_ctx, v_new[:, None]], axis=1)
+    mask = jnp.concatenate([ctx_mask, jnp.ones((b, 1), bool)], axis=1)
+    if USE_PALLAS_DECODE:
+        from repro.kernels import ops
+        return ops.gather_attention(q, k_all, v_all, mask,
+                                    interpret=PALLAS_INTERPRET).astype(q.dtype)
+    kq = repeat_kv(k_all, h // hk)
+    vq = repeat_kv(v_all, h // hk)
+    scores = jnp.einsum("bhd,bnhd->bhn", q, kq) / jnp.sqrt(d).astype(q.dtype)
+    scores = jnp.where(mask[:, None, :], scores, jnp.finfo(scores.dtype).min)
+    w = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+    return jnp.einsum("bhn,bnhd->bhd", w, vq)
+
+
+# --------------------------------------------------------------------------
+# MLPs
+# --------------------------------------------------------------------------
+
+def init_swiglu(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], (d_model, d_ff), dtype),
+        "w_up": dense_init(ks[1], (d_model, d_ff), dtype),
+        "w_down": dense_init(ks[2], (d_ff, d_model), dtype),
+    }
+
+
+def swiglu(p, x: jax.Array) -> jax.Array:
+    return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+
+
+def init_gelu_mlp(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    ks = jax.random.split(key, 2)
+    return {
+        "w_up": dense_init(ks[0], (d_model, d_ff), dtype),
+        "b_up": jnp.zeros((d_ff,), dtype),
+        "w_down": dense_init(ks[1], (d_ff, d_model), dtype),
+        "b_down": jnp.zeros((d_model,), dtype),
+    }
+
+
+def gelu_mlp(p, x: jax.Array) -> jax.Array:
+    return jax.nn.gelu(x @ p["w_up"] + p["b_up"]) @ p["w_down"] + p["b_down"]
+
+
+# --------------------------------------------------------------------------
+# Mixture of Experts (GShard-style dispatch/combine; expert axis shardable)
+# --------------------------------------------------------------------------
+
+# Optional activation-sharding annotations for the MoE dispatch path.  Set by
+# the launcher (inside a mesh context) via ``set_moe_pspecs``; None disables
+# (single-device tests).  Without these, GSPMD is free to replicate the
+# per-expert buffer and all-reduce [B,E,C,F] partials — catastrophic at pod
+# scale (observed 33 TB/device of all-reduce on llama4 prefill).  Pinning the
+# buffer to P(batch→data, expert→model) turns dispatch into the canonical
+# token all-to-all instead.
+_MOE_PSPECS: dict | None = None
+
+
+def set_moe_pspecs(specs: dict | None) -> None:
+    """``specs = {"buf": P(dp, "model", None, None), "y": P(dp, None, None)}``."""
+    global _MOE_PSPECS
+    _MOE_PSPECS = specs
+
+
+def _moe_constrain(name: str, x: jax.Array) -> jax.Array:
+    if _MOE_PSPECS is None or name not in _MOE_PSPECS:
+        return x
+    return jax.lax.with_sharding_constraint(x, _MOE_PSPECS[name])
+
+def init_moe(key, *, d_model: int, d_ff: int, n_experts: int, dtype=jnp.float32,
+             shared_d_ff: int = 0):
+    ks = jax.random.split(key, 5)
+    s = 1.0 / np.sqrt(d_model)
+    p = {
+        "router": dense_init(ks[0], (d_model, n_experts), dtype, scale=0.02),
+        "w_gate": jax.random.normal(ks[1], (n_experts, d_model, d_ff), dtype) * s,
+        "w_up": jax.random.normal(ks[2], (n_experts, d_model, d_ff), dtype) * s,
+        "w_down": jax.random.normal(ks[3], (n_experts, d_ff, d_model), dtype) / np.sqrt(d_ff),
+    }
+    if shared_d_ff:
+        p["shared"] = init_swiglu(ks[4], d_model, shared_d_ff, dtype)
+    return p
+
+
+def moe(p, x: jax.Array, *, top_k: int, capacity_factor: float = 1.25):
+    """Top-k routed MoE with capacity-bounded scatter dispatch.
+
+    ``x: [B, S, D]`` → ``(y [B, S, D], aux_loss scalar)``.
+
+    Tokens are scattered into a per-expert buffer ``[B, E, C, D]`` (positions
+    past capacity are dropped), the expert SwiGLU runs batched over the ``E``
+    axis (which is what gets sharded expert-parallel), and outputs gather
+    back.  Memory is O(B·(E·C + S·K)·D) — no dense ``[B,S,E,C]`` one-hots —
+    and compute scales with ``top_k``, not ``n_experts``.
+    """
+    b, s, d = x.shape
+    e = p["router"].shape[1]
+    logits = x @ p["router"]                               # [B,S,E]
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)      # [B,S,K]
+    gate_vals = gate_vals / (gate_vals.sum(axis=-1, keepdims=True) + 1e-9)
+
+    cap = max(1, int(np.ceil(s * top_k / e * capacity_factor)))
+    t = s * top_k                                          # assignments per row
+    expert_of = gate_idx.reshape(b, t)                     # [B,T]
+    token_of = jnp.repeat(jnp.arange(s), top_k)[None, :].repeat(b, 0)  # [B,T]
+    gates = gate_vals.reshape(b, t)
+
+    # position of each assignment within its expert's queue
+    assign_1h = jax.nn.one_hot(expert_of, e, dtype=jnp.int32)          # [B,T,E]
+    pos_all = jnp.cumsum(assign_1h, axis=1) - assign_1h                # [B,T,E]
+    pos = jnp.take_along_axis(pos_all, expert_of[..., None], axis=-1)[..., 0]  # [B,T]
+    keep = pos < cap
+    pos_safe = jnp.where(keep, pos, cap)                   # cap = out-of-bounds → drop
+
+    x_tok = jnp.take_along_axis(x, token_of[..., None], axis=1)        # [B,T,D]
+    bidx = jnp.arange(b)[:, None].repeat(t, 1)
+    buf = jnp.zeros((b, e, cap, d), x.dtype)
+    buf = buf.at[bidx, expert_of, pos_safe].set(x_tok, mode="drop")
+    buf = _moe_constrain("buf", buf)          # [B(data), E(model), C, D]
+
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", buf, p["w_gate"]))
+    h = h * jnp.einsum("becd,edf->becf", buf, p["w_up"])
+    out = jnp.einsum("becf,efd->becd", h, p["w_down"])     # [B,E,C,D]
+    out = _moe_constrain("buf", out)
+
+    y_tok = out[bidx, expert_of, pos_safe.clip(0, cap - 1)]            # [B,T,D]
+    y_tok = y_tok * (gates * keep)[..., None]
+    y = jnp.zeros_like(x).at[bidx, token_of].add(y_tok)
+    y = _moe_constrain("y", y)
+
+    if "shared" in p:
+        y = y + swiglu(p["shared"], x)
+
+    # Switch-style load-balance loss
+    me = probs.mean(axis=(0, 1))                                       # [E]
+    ce = jax.nn.one_hot(gate_idx, e).sum(axis=2).mean(axis=(0, 1))     # routed frac
+    aux = e * jnp.sum(me * ce)
+    return y, aux

@@ -1,0 +1,356 @@
+"""Generic decoder stack covering dense / MoE / SSM / hybrid architectures.
+
+A model is a :class:`ModelConfig` (block pattern + dims) plus a params pytree.
+``forward`` runs the full sequence (training / prefill);
+:class:`TransformerAdapter` exposes the per-block prefill/decode interface the
+KVSwap engine consumes (repro.core.adapter.ModelAdapter).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import ssm as S
+
+ATTN_KINDS = ("attn", "moe_attn", "shared_attn")
+STATE_KINDS = ("mamba2", "mlstm", "slstm")
+
+# Optional between-block activation sharding (sequence parallelism): set by
+# the launcher inside a mesh context.  Constraining x to P(data, model, None)
+# between blocks lets GSPMD replace each TP all-reduce with a
+# reduce-scatter + all-gather pair — half the collective bytes.
+_ACT_PSPEC = None
+
+
+def set_activation_pspec(spec) -> None:
+    global _ACT_PSPEC
+    _ACT_PSPEC = spec
+
+
+def _act_constrain(x):
+    if _ACT_PSPEC is None or x.ndim != 3:
+        return x
+    return jax.lax.with_sharding_constraint(x, _ACT_PSPEC)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch_type: str                 # dense | moe | hybrid | ssm | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+    block_pattern: tuple = ()      # per-layer kinds; default: all "attn"
+    qk_norm: bool = False
+    rope_theta: float = 500000.0
+    n_experts: int = 0
+    moe_top_k: int = 0
+    moe_d_ff: int = 0
+    moe_shared_d_ff: int = 0
+    moe_capacity_factor: float = 1.25
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_use_pallas: bool = False   # route Mamba2 intra-chunk through Pallas
+    tie_embeddings: bool = True
+    source: str = ""               # citation for the config
+
+    @property
+    def blocks(self) -> tuple:
+        return self.block_pattern or ("attn",) * self.n_layers
+
+    @property
+    def kv_layers(self) -> tuple:
+        return tuple(i for i, k in enumerate(self.blocks) if k in ATTN_KINDS)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (for 6·N·D roofline bookkeeping)."""
+        d, hd = self.d_model, self.head_dim
+        n = self.vocab_size * d                       # embed (tied head)
+        if not self.tie_embeddings:
+            n += self.vocab_size * d
+        for kind in self.blocks:
+            if kind in ("attn", "moe_attn"):
+                n += d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd \
+                    + self.n_heads * hd * d
+                if kind == "attn":
+                    n += 3 * d * self.d_ff
+                else:
+                    n += d * self.n_experts + 3 * self.n_experts * d * self.moe_d_ff
+                    n += 3 * d * self.moe_shared_d_ff
+            elif kind == "shared_attn":
+                pass  # weights shared; counted once below
+            elif kind == "mamba2":
+                di = self.ssm_expand * d
+                n += d * (2 * di + 2 * self.ssm_state + di // 64) + di * d
+            elif kind in ("mlstm", "slstm"):
+                n += 4 * d * d if kind == "mlstm" else 8 * d * d + d * d
+        if "shared_attn" in self.blocks:
+            n += d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd \
+                + self.n_heads * hd * d + 3 * d * self.d_ff
+        return n
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: top-k experts only)."""
+        if self.n_experts == 0:
+            return self.param_count()
+        full = self.param_count()
+        moe_layers = sum(1 for k in self.blocks if k == "moe_attn")
+        all_exp = moe_layers * 3 * self.n_experts * self.d_model * self.moe_d_ff
+        act_exp = moe_layers * 3 * self.moe_top_k * self.d_model * self.moe_d_ff
+        return full - all_exp + act_exp
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def init_params(key, cfg: ModelConfig, dtype=jnp.float32):
+    n_blocks = len(cfg.blocks)
+    keys = jax.random.split(key, n_blocks + 3)
+    attn_kw = dict(d_model=cfg.d_model, n_heads=cfg.n_heads,
+                   n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
+                   qk_norm=cfg.qk_norm, dtype=dtype)
+    blocks = []
+    for i, kind in enumerate(cfg.blocks):
+        k = keys[i]
+        if kind == "attn":
+            ka, km = jax.random.split(k)
+            blocks.append({
+                "attn_norm": L.init_rmsnorm(cfg.d_model, dtype),
+                "attn": L.init_attention(ka, **attn_kw),
+                "mlp_norm": L.init_rmsnorm(cfg.d_model, dtype),
+                "mlp": L.init_swiglu(km, cfg.d_model, cfg.d_ff, dtype),
+            })
+        elif kind == "moe_attn":
+            ka, km = jax.random.split(k)
+            blocks.append({
+                "attn_norm": L.init_rmsnorm(cfg.d_model, dtype),
+                "attn": L.init_attention(ka, **attn_kw),
+                "mlp_norm": L.init_rmsnorm(cfg.d_model, dtype),
+                "moe": L.init_moe(km, d_model=cfg.d_model, d_ff=cfg.moe_d_ff,
+                                  n_experts=cfg.n_experts, dtype=dtype,
+                                  shared_d_ff=cfg.moe_shared_d_ff),
+            })
+        elif kind == "shared_attn":
+            blocks.append({"attn_norm": L.init_rmsnorm(cfg.d_model, dtype)})
+        elif kind == "mamba2":
+            blocks.append({
+                "norm": L.init_rmsnorm(cfg.d_model, dtype),
+                "mamba": S.init_mamba2(k, d_model=cfg.d_model, d_state=cfg.ssm_state,
+                                       expand=cfg.ssm_expand, dtype=dtype),
+            })
+        elif kind == "mlstm":
+            blocks.append({
+                "norm": L.init_rmsnorm(cfg.d_model, dtype),
+                "mlstm": S.init_mlstm(k, d_model=cfg.d_model, n_heads=cfg.n_heads, dtype=dtype),
+            })
+        elif kind == "slstm":
+            blocks.append({
+                "norm": L.init_rmsnorm(cfg.d_model, dtype),
+                "slstm": S.init_slstm(k, d_model=cfg.d_model, n_heads=cfg.n_heads, dtype=dtype),
+            })
+        else:
+            raise ValueError(f"unknown block kind {kind}")
+    params = {
+        "embed": jax.random.normal(keys[-3], (cfg.vocab_size, cfg.d_model), dtype) * 0.02,
+        "blocks": blocks,
+        "final_norm": L.init_rmsnorm(cfg.d_model, dtype),
+    }
+    if "shared_attn" in cfg.blocks:
+        ka, km = jax.random.split(keys[-2])
+        params["shared_attn"] = {
+            "attn": L.init_attention(ka, **attn_kw),
+            "mlp_norm": L.init_rmsnorm(cfg.d_model, dtype),
+            "mlp": L.init_swiglu(km, cfg.d_model, cfg.d_ff, dtype),
+        }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(keys[-1], (cfg.d_model, cfg.vocab_size), dtype)
+    return params
+
+
+# --------------------------------------------------------------------------
+# full-sequence forward (training / prefill)
+# --------------------------------------------------------------------------
+
+def _attn_params(params, cfg: ModelConfig, layer: int):
+    kind = cfg.blocks[layer]
+    blk = params["blocks"][layer]
+    if kind == "shared_attn":
+        return blk, params["shared_attn"]["attn"], params["shared_attn"]
+    return blk, blk["attn"], blk
+
+
+def block_forward(params, cfg: ModelConfig, layer: int, x, positions, state=None,
+                  *, return_kv: bool = False):
+    """Full-seq forward through one block.  Returns (x, aux, kv_or_state)."""
+    kind = cfg.blocks[layer]
+    blk = params["blocks"][layer]
+    aux = 0.0
+    if kind in ATTN_KINDS:
+        nb, attn_p, mlp_holder = _attn_params(params, cfg, layer)
+        h = L.rmsnorm(nb["attn_norm"], x)
+        q, k, v = L.attention_qkv(attn_p, h, positions, n_heads=cfg.n_heads,
+                                  n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
+                                  rope_theta=cfg.rope_theta, qk_norm=cfg.qk_norm)
+        o = L.causal_attention(q, k, v)
+        x = x + o.reshape(*x.shape[:-1], cfg.n_heads * cfg.head_dim) @ attn_p["wo"]
+        h2 = L.rmsnorm(mlp_holder["mlp_norm"], x)
+        if kind == "moe_attn":
+            y, aux = L.moe(blk["moe"], h2, top_k=cfg.moe_top_k,
+                           capacity_factor=cfg.moe_capacity_factor)
+        else:
+            y = L.swiglu(mlp_holder["mlp"], h2)
+        x = _act_constrain(x + y)
+        return x, aux, ((k, v) if return_kv else None)
+    # state blocks
+    h = L.rmsnorm(blk["norm"], x)
+    if kind == "mamba2":
+        y, st = S.mamba2_forward(blk["mamba"], h, state,
+                                 use_pallas=cfg.ssm_use_pallas)
+    elif kind == "mlstm":
+        y, st = S.mlstm_forward(blk["mlstm"], h, state)
+    else:
+        y, st = S.slstm_forward(blk["slstm"], h, state)
+    return x + y, aux, st
+
+
+def forward(params, cfg: ModelConfig, tokens, *, embeddings=None,
+            remat: bool = False):
+    """Full forward: ``tokens [B, S]`` (or precomputed ``embeddings``) →
+    ``(logits [B, S, V], aux_loss)``.
+
+    ``remat=True`` checkpoints each block (recompute activations in the
+    backward pass) — the standard training memory/compute trade; cuts the
+    live-activation footprint from O(L) blocks to O(1).
+    """
+    if embeddings is None:
+        x = params["embed"][tokens]
+    else:
+        x = embeddings
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None, :].repeat(b, axis=0)
+    aux_total = 0.0
+    for i in range(len(cfg.blocks)):
+        if remat:
+            def blk(params_, x_, _i=i):
+                y, aux, _ = block_forward(params_, cfg, _i, x_, positions)
+                return y, aux
+            x, aux = jax.checkpoint(blk)(params, x)
+        else:
+            x, aux, _ = block_forward(params, cfg, i, x, positions)
+        aux_total = aux_total + aux
+    x = L.rmsnorm(params["final_norm"], x)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return x @ head, aux_total
+
+
+# --------------------------------------------------------------------------
+# engine adapter
+# --------------------------------------------------------------------------
+
+class TransformerAdapter:
+    """Implements repro.core.adapter.ModelAdapter for this stack.
+
+    ``n_layers`` as seen by the engine counts **all** blocks; blocks whose
+    kind is a state kind expose ``layer_kinds`` so the engine can route them
+    through the stateful path (hybrid support).
+    """
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.n_layers = len(cfg.blocks)
+        self.n_heads = cfg.n_heads
+        self.n_kv_heads = cfg.n_kv_heads
+        self.head_dim = cfg.head_dim
+        self.d_model = cfg.d_model
+        self.d_ff = cfg.d_ff or 4 * cfg.d_model
+        self.vocab_size = cfg.vocab_size
+        self.layer_kinds = tuple("kv" if k in ATTN_KINDS else "state" for k in cfg.blocks)
+
+    # -- embedding / head -------------------------------------------------
+    def embed(self, params, tokens):
+        return params["embed"][tokens]
+
+    def logits(self, params, x):
+        x = L.rmsnorm(params["final_norm"], x)
+        head = params["embed"].T if self.cfg.tie_embeddings else params["lm_head"]
+        return x @ head
+
+    # -- prefill -----------------------------------------------------------
+    def prefill_block(self, params, layer, x, positions):
+        x, _, kv = block_forward(params, self.cfg, layer, x, positions, return_kv=True)
+        return x, kv[0], kv[1]
+
+    def prefill_state_block(self, params, layer, x, positions):
+        x, _, st = block_forward(params, self.cfg, layer, x, positions)
+        return x, st
+
+    # -- decode ------------------------------------------------------------
+    @functools.partial(jax.jit, static_argnames=("self", "layer"))
+    def decode_block(self, params, layer, x, positions, k_ctx, v_ctx, ctx_mask):
+        cfg = self.cfg
+        kind = cfg.blocks[layer]
+        blk = params["blocks"][layer]
+        nb, attn_p, mlp_holder = _attn_params(params, cfg, layer)
+        h = L.rmsnorm(nb["attn_norm"], x)
+        q, k_new, v_new = L.attention_qkv(
+            attn_p, h[:, None], positions[:, None], n_heads=cfg.n_heads,
+            n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
+            rope_theta=cfg.rope_theta, qk_norm=cfg.qk_norm)
+        q, k_new, v_new = q[:, 0], k_new[:, 0], v_new[:, 0]
+        o = L.decode_attention(q, k_ctx, v_ctx, ctx_mask, k_new, v_new)
+        x = x + o.reshape(x.shape[0], cfg.n_heads * cfg.head_dim) @ attn_p["wo"]
+        h2 = L.rmsnorm(mlp_holder["mlp_norm"], x)
+        if kind == "moe_attn":
+            y, _ = L.moe(blk["moe"], h2[:, None], top_k=cfg.moe_top_k,
+                         capacity_factor=cfg.moe_capacity_factor)
+            y = y[:, 0]
+        else:
+            y = L.swiglu(mlp_holder["mlp"], h2)
+        return x + y, k_new, v_new
+
+    @functools.partial(jax.jit, static_argnames=("self", "layer"))
+    def decode_state_block(self, params, layer, x, positions, state):
+        cfg = self.cfg
+        blk = params["blocks"][layer]
+        kind = cfg.blocks[layer]
+        h = L.rmsnorm(blk["norm"], x)
+        if kind == "mamba2":
+            y, st = S.mamba2_step(blk["mamba"], h, state)
+        elif kind == "mlstm":
+            y, st = S.mlstm_step(blk["mlstm"], h, state)
+        else:
+            y, st = S.slstm_step(blk["slstm"], h, state)
+        return x + y, st
+
+    def init_state(self, params, layer, batch):
+        kind = self.cfg.blocks[layer]
+        blk = params["blocks"][layer]
+        if kind == "mamba2":
+            return S.mamba2_init_state(blk["mamba"], batch)
+        if kind == "mlstm":
+            return S.mlstm_init_state(blk["mlstm"], batch)
+        if kind == "slstm":
+            return S.slstm_init_state(blk["slstm"], batch)
+        raise ValueError(f"layer {layer} has no state")
+
+    # -- predictor ---------------------------------------------------------
+    @functools.partial(jax.jit, static_argnames=("self", "layer"))
+    def predict_query(self, params, layer, x, positions):
+        cfg = self.cfg
+        nb, attn_p, _ = _attn_params(params, cfg, layer)
+        h = L.rmsnorm(nb["attn_norm"], x)
+        b = x.shape[0]
+        q = (h @ attn_p["wq"]).reshape(b, cfg.n_heads, cfg.head_dim)
+        if cfg.qk_norm:
+            q = L.rmsnorm(attn_p["q_norm"], q)
+        return L.apply_rope(q[:, None], positions[:, None], cfg.rope_theta)[:, 0]

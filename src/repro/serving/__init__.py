@@ -1,0 +1,7 @@
+from repro.serving.decode import (KVSwapServeConfig, attach_kvswap_adapters,
+                                  flush_rolling, init_cache, prefill,
+                                  serve_step)
+from repro.serving.scheduler import BatchServer, Request
+
+__all__ = ["KVSwapServeConfig", "attach_kvswap_adapters", "flush_rolling",
+           "init_cache", "prefill", "serve_step", "BatchServer", "Request"]

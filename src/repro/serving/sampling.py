@@ -1,0 +1,45 @@
+"""Samplers for the serving loop: greedy, temperature, top-k, top-p.
+
+Pure-JAX, jittable; the BatchServer takes any ``sampler(logits) -> tokens``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def greedy(logits) -> np.ndarray:
+    return np.asarray(jnp.argmax(logits, axis=-1))
+
+
+def make_sampler(*, temperature: float = 1.0, top_k: int = 0, top_p: float = 0.0,
+                 seed: int = 0):
+    """Stateful (auto-splitting) categorical sampler."""
+    key_holder = {"key": jax.random.PRNGKey(seed)}
+
+    @functools.partial(jax.jit, static_argnames=())
+    def _sample(key, logits):
+        lg = logits.astype(jnp.float32) / max(temperature, 1e-6)
+        if top_k:
+            kth = jax.lax.top_k(lg, top_k)[0][..., -1:]
+            lg = jnp.where(lg < kth, -jnp.inf, lg)
+        if top_p:
+            sorted_lg = jnp.sort(lg, axis=-1)[..., ::-1]
+            probs = jax.nn.softmax(sorted_lg, axis=-1)
+            cum = jnp.cumsum(probs, axis=-1)
+            # smallest logit still inside the nucleus
+            inside = cum - probs < top_p
+            cutoff = jnp.min(jnp.where(inside, sorted_lg, jnp.inf), axis=-1,
+                             keepdims=True)
+            lg = jnp.where(lg < cutoff, -jnp.inf, lg)
+        return jax.random.categorical(key, lg, axis=-1)
+
+    def sampler(logits) -> np.ndarray:
+        key_holder["key"], sub = jax.random.split(key_holder["key"])
+        return np.asarray(_sample(sub, logits))
+
+    return sampler

@@ -1,0 +1,106 @@
+"""Batched request scheduler over the KVSwap engine.
+
+The paper's deployment scenario is batched on-device serving (Tab. 4 sweeps
+batch 1-16).  This scheduler gives the engine a request-queue front end:
+
+* requests accumulate until ``batch`` are ready (or ``flush()`` is called),
+* prompts are left-padded to a common length (padding tokens masked out of
+  the KV store by prefix truncation — we simply prefill from the longest
+  common start; simpler and faithful to the fixed-batch engine),
+* one engine instance serves the batch to each request's ``max_new``.
+
+Greedy sampling by default; plug a ``sampler(logits) -> token_ids`` for
+temperature/top-k.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+from repro.core.engine import EngineConfig, KVSwapEngine
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray          # [S] int32
+    max_new: int
+    output: np.ndarray | None = None
+
+
+def greedy_sampler(logits) -> np.ndarray:
+    import jax.numpy as jnp
+    return np.asarray(jnp.argmax(logits, axis=-1))
+
+
+class BatchServer:
+    """Static batcher: collects ``batch`` requests, serves them together."""
+
+    def __init__(self, model_adapter, params, engine_cfg: EngineConfig, *,
+                 batch: int, calib_k: np.ndarray,
+                 sampler: Callable = greedy_sampler):
+        self.model = model_adapter
+        self.params = params
+        self.cfg = engine_cfg
+        self.batch = batch
+        self.calib_k = calib_k
+        self.sampler = sampler
+        self._queue: list[Request] = []
+        self._next_id = 0
+        self.completed: dict[int, Request] = {}
+
+    def submit(self, prompt: np.ndarray, max_new: int) -> int:
+        rid = self._next_id
+        self._next_id += 1
+        self._queue.append(Request(rid, np.asarray(prompt, np.int32), max_new))
+        if len(self._queue) >= self.batch:
+            self.flush()
+        return rid
+
+    def flush(self) -> None:
+        """Serve everything queued (pads the batch with clones if short)."""
+        if not self._queue:
+            return
+        reqs = self._queue[: self.batch]
+        self._queue = self._queue[self.batch:]
+        real = len(reqs)
+        while len(reqs) < self.batch:           # pad with a clone (discarded)
+            pad = Request(-1, reqs[0].prompt, reqs[0].max_new)
+            reqs.append(pad)
+
+        # left-align prompts to the shortest; the tail tokens of longer
+        # prompts are decoded so every request sees its full prompt
+        min_len = min(len(r.prompt) for r in reqs)
+        prompts = np.stack([r.prompt[:min_len] for r in reqs])
+        tails = [r.prompt[min_len:] for r in reqs]
+        max_tail = max((len(t) for t in tails), default=0)
+        n_new = max(r.max_new for r in reqs)
+
+        with KVSwapEngine(self.model, self.params, self.cfg,
+                          batch=self.batch, calib_k=self.calib_k) as eng:
+            logits = eng.prefill(prompts)
+            outs: list[list[int]] = [[] for _ in reqs]
+            # feed remaining prompt tails (teacher-forced), then decode
+            for step in range(max_tail + n_new):
+                if step < max_tail:
+                    nxt = np.array([
+                        t[step] if step < len(t) else self.sampler(logits[i:i + 1])[0]
+                        for i, t in enumerate(tails)], dtype=np.int64)
+                else:
+                    nxt = self.sampler(logits)
+                    for i in range(self.batch):
+                        outs[i].append(int(nxt[i]))
+                logits = eng.decode_step(nxt)
+            stats = {"reuse_ratio": eng.reuse_ratio(),
+                     "throughput": eng.simulated_throughput()}
+
+        for i, r in enumerate(reqs[:real]):
+            r.output = np.asarray(outs[i][: r.max_new], np.int32)
+            self.completed[r.rid] = r
+        self.last_stats = stats
+
+    def result(self, rid: int) -> np.ndarray:
+        return self.completed[rid].output

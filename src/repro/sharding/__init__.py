@@ -1,0 +1,4 @@
+from repro.sharding.partition import (batch_axes, cache_pspecs, param_pspecs,
+                                      to_named_shardings)
+
+__all__ = ["param_pspecs", "cache_pspecs", "batch_axes", "to_named_shardings"]

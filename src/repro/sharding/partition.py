@@ -1,0 +1,191 @@
+"""Partition rules: param-path → PartitionSpec over ("pod", "data", "model").
+
+Tensor parallelism on ``model``:
+  * attention: head (fused H·d) dim of wq/wk/wv; wo reduces over it
+  * FFN: d_ff of w_gate/w_up; w_down reduces over it
+  * MoE: the expert axis (expert parallelism reuses the TP axis)
+  * embeddings / LM head: vocab
+  * Mamba2 / xLSTM: the inner expanded dim
+
+Data parallelism on ``data`` (+ ``pod``): the batch dim of activations — or,
+for ``long_500k`` (batch=1), the KV **sequence** dim (context parallelism).
+Weights are replicated across data/pod for inference; training uses the same
+specs with gradients psum'd by GSPMD.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _spec_for(path: str, leaf) -> P:
+    ndim = getattr(leaf, "ndim", len(getattr(leaf, "shape", ())))
+    last = path.rsplit("/", 1)[-1]
+
+    # --- embeddings / head ------------------------------------------------
+    if last == "embed":
+        return P("model", None)
+    if last == "lm_head":
+        return P(None, "model")
+
+    # --- MoE ---------------------------------------------------------------
+    if "/moe/" in path or path.endswith("router"):
+        if last == "router":
+            return P(None, None)
+        if last in ("w_gate", "w_up", "w_down") and ndim == 3:
+            return P("model", None, None)        # expert parallel
+        if "shared" in path:                     # shared expert: plain TP
+            if last in ("w_gate", "w_up"):
+                return P(None, "model")
+            if last == "w_down":
+                return P("model", None)
+
+    # --- attention ----------------------------------------------------------
+    if last in ("wq", "wk", "wv"):
+        return P(None, "model")
+    if last == "wo":
+        return P("model", None)
+
+    # --- dense MLP -----------------------------------------------------------
+    if last in ("w_gate", "w_up"):
+        return P(None, "model")
+    if last == "w_down":
+        return P("model", None)
+
+    # --- Mamba2 ----------------------------------------------------------------
+    if "mamba" in path:
+        if last == "in_proj":
+            return P(None, "model")
+        if last == "out_proj":
+            return P("model", None)
+        if last in ("conv_w", "conv_b"):
+            return P("model") if ndim == 1 else P("model", None)
+        # per-head vectors (a_log, d_skip, dt_bias): small — replicate
+        return P()
+
+    # --- xLSTM -----------------------------------------------------------------
+    if "mlstm" in path or "slstm" in path:
+        if last in ("w_x", "w_h", "w_if"):
+            return P(None, "model")
+        return P()
+
+    # norms, biases, scalars
+    return P()
+
+
+def sanitize_spec(spec: P, shape, mesh) -> P:
+    """Drop axis assignments whose dim isn't divisible by the axis size.
+
+    pjit input shardings require divisibility (e.g. whisper's 51,866 vocab
+    doesn't split 16 ways; xLSTM's 2·H=8 gate columns don't either) — such
+    dims fall back to replication.
+    """
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    parts = []
+    for i, p in enumerate(spec):
+        if p is None or i >= len(shape):
+            parts.append(p)
+            continue
+        names = p if isinstance(p, tuple) else (p,)
+        total = int(np.prod([sizes[n] for n in names]))
+        parts.append(p if shape[i] % total == 0 else None)
+    return P(*parts)
+
+
+def param_pspecs(params, mesh=None):
+    """Pytree of PartitionSpecs matching ``params``.
+
+    With ``mesh`` given, specs are sanitized against leaf shapes.
+    """
+    def make(path, leaf):
+        spec = _spec_for(_path_str(path), leaf)
+        if mesh is not None and hasattr(leaf, "shape"):
+            spec = sanitize_spec(spec, leaf.shape, mesh)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(make, params)
+
+
+def to_named_shardings(mesh, pspec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), pspec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_axes(mesh) -> tuple:
+    """The data-parallel axis group for this mesh (('pod','data') or ('data',))."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def cache_pspecs(cfg, mesh, *, shard_seq: bool, kvswap: bool,
+                 seq_over_model: bool = False, rolling: bool = False):
+    """PartitionSpecs for the serving cache.
+
+    ``shard_seq=False``: batch-sharded KV (decode_32k — every device owns
+    whole sequences).  ``shard_seq=True``: sequence-sharded KV (long_500k
+    context parallelism; batch too small to split).
+
+    ``seq_over_model=True`` (§Perf optimization, beyond-paper): additionally
+    shard the KV **sequence** axis over the tensor-parallel ``model`` axis.
+    KVSwap's selection means attention only ever gathers M·G tokens, so the
+    full cache never needs to be device-local — each chip holds 1/16 of every
+    sequence and only the *selected* groups cross ICI.  This is the paper's
+    disk-tier insight mapped onto the pod's HBM pool.
+    """
+    dp = batch_axes(mesh)
+    sm = "model" if seq_over_model else None
+    is_whisper = type(cfg).__name__ == "WhisperConfig"
+    blocks = ("attn",) * cfg.n_layers if is_whisper else cfg.blocks
+    layers = []
+    for kind in blocks:
+        if kind in ("attn", "moe_attn", "shared_attn"):
+            if shard_seq:
+                seq = tuple(dp) + ("model",) if seq_over_model else dp
+                ent = {"k": P(None, seq, None, None), "v": P(None, seq, None, None)}
+                if kvswap:
+                    ent["k_lr"] = P(None, seq, None)
+                    if rolling:
+                        ent["rb_k"] = P(None, None, None, None)
+                        ent["rb_v"] = P(None, None, None, None)
+            else:
+                ent = {"k": P(dp, sm, None, None), "v": P(dp, sm, None, None)}
+                if kvswap:
+                    ent["k_lr"] = P(dp, sm, None)
+                    if rolling:
+                        ent["rb_k"] = P(dp, None, None, None)
+                        ent["rb_v"] = P(dp, None, None, None)
+            layers.append(ent)
+        elif kind == "mamba2":
+            bb = None if shard_seq else dp
+            layers.append({"conv": P(bb, "model", None), "ssm": P(bb, "model", None, None)})
+        elif kind == "mlstm":
+            bb = None if shard_seq else dp
+            layers.append({"c": P(bb, None, None, None),
+                           "n": P(bb, None, None), "m": P(bb, None)})
+        elif kind == "slstm":
+            bb = None if shard_seq else dp
+            layers.append({"c": P(bb, None, None), "n": P(bb, None, None),
+                           "h": P(bb, None, None), "m": P(bb, None)})
+        else:
+            raise ValueError(kind)
+    out = {"layers": layers, "length": P()}
+    if rolling:
+        out["main_len"] = P()
+    return out

@@ -1,0 +1,5 @@
+from repro.training.optim import AdamWState, adamw_init, adamw_update, cosine_lr
+from repro.training.train import TrainState, make_train_step, train_loop
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update", "cosine_lr",
+           "TrainState", "make_train_step", "train_loop"]

@@ -1,0 +1,98 @@
+"""Training loop: cross-entropy LM objective (+ MoE aux loss), jitted step."""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.training.optim import AdamWConfig, AdamWState, adamw_init, adamw_update, cosine_lr
+
+
+class TrainState(NamedTuple):
+    params: object
+    opt: AdamWState
+
+
+def softmax_xent(logits: jax.Array, targets: jax.Array) -> jax.Array:
+    """Mean token cross-entropy.  logits [B,S,V], targets [B,S] int."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return -ll.mean()
+
+
+def make_loss_fn(forward: Callable, cfg, *, aux_weight: float = 0.01):
+    """``forward(params, cfg, tokens) -> (logits, aux)``; whisper passes
+    ``forward(params, cfg, tokens, enc_out)`` via a closure instead."""
+
+    def loss_fn(params, batch):
+        logits, aux = forward(params, cfg, batch["tokens"])
+        loss = softmax_xent(logits, batch["targets"])
+        if aux is not None:
+            loss = loss + aux_weight * aux
+        return loss, {"xent": loss, "aux": aux if aux is not None else 0.0}
+
+    return loss_fn
+
+
+def make_train_step(forward: Callable, cfg, opt_cfg: AdamWConfig | None = None,
+                    *, total_steps: int = 1000, warmup: int = 50,
+                    aux_weight: float = 0.01, accum_steps: int = 1):
+    """``accum_steps > 1`` splits the batch into microbatches and averages
+    gradients across them (same update as the full batch for a mean loss) —
+    the standard fit-the-global-batch-into-HBM knob."""
+    opt_cfg = opt_cfg or AdamWConfig()
+    loss_fn = make_loss_fn(forward, cfg, aux_weight=aux_weight)
+
+    @jax.jit
+    def train_step(state: TrainState, batch):
+        if accum_steps == 1:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                state.params, batch)
+        else:
+            micro = jax.tree_util.tree_map(
+                lambda t: t.reshape(accum_steps, t.shape[0] // accum_steps,
+                                    *t.shape[1:]), batch)
+
+            def acc(carry, mb):
+                g_sum, l_sum = carry
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(state.params, mb)
+                g_sum = jax.tree_util.tree_map(jnp.add, g_sum, g)
+                return (g_sum, l_sum + l), None
+
+            zeros = jax.tree_util.tree_map(jnp.zeros_like, state.params)
+            (g_sum, l_sum), _ = jax.lax.scan(acc, (zeros, jnp.zeros(())), micro)
+            grads = jax.tree_util.tree_map(lambda g: g / accum_steps, g_sum)
+            loss = l_sum / accum_steps
+            metrics = {"xent": loss, "aux": 0.0}
+        lr = cosine_lr(state.opt.step, base_lr=opt_cfg.lr, warmup=warmup, total=total_steps)
+        params, opt = adamw_update(state.params, grads, state.opt, opt_cfg, lr=lr)
+        metrics = dict(metrics, loss=loss, lr=lr)
+        return TrainState(params, opt), metrics
+
+    return train_step
+
+
+def train_loop(params, forward, cfg, stream, *, steps: int, batch: int, seq_len: int,
+               opt_cfg: AdamWConfig | None = None, log_every: int = 10,
+               checkpoint_cb: Callable | None = None):
+    """Simple host loop over a SyntheticLMStream (or compatible)."""
+    state = TrainState(params, adamw_init(params))
+    step_fn = make_train_step(forward, cfg, opt_cfg, total_steps=steps)
+    history = []
+    t0 = time.time()
+    for step in range(steps):
+        batch_np = stream.batch(step, batch, seq_len)
+        batch_dev = {k: jnp.asarray(v) for k, v in batch_np.items()}
+        state, metrics = step_fn(state, batch_dev)
+        if step % log_every == 0 or step == steps - 1:
+            loss = float(metrics["loss"])
+            history.append({"step": step, "loss": loss, "lr": float(metrics["lr"]),
+                            "wall": time.time() - t0})
+            print(f"step {step:5d}  loss {loss:.4f}  lr {float(metrics['lr']):.2e}")
+        if checkpoint_cb is not None and step and step % 100 == 0:
+            checkpoint_cb(state, step)
+    return state, history

@@ -1,0 +1,4 @@
+from repro.utils.bytesize import fmt_bytes, GiB, MiB, KiB
+from repro.utils.treeops import tree_bytes, tree_count
+
+__all__ = ["fmt_bytes", "GiB", "MiB", "KiB", "tree_bytes", "tree_count"]

@@ -1,0 +1,21 @@
+"""Small pytree utilities (param counting, byte accounting)."""
+
+import jax
+import numpy as np
+
+
+def tree_count(tree) -> int:
+    """Total number of scalar elements across all leaves."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    return int(sum(np.prod(l.shape) if hasattr(l, "shape") else 1 for l in leaves))
+
+
+def tree_bytes(tree) -> int:
+    """Total bytes across all array leaves."""
+    total = 0
+    for l in jax.tree_util.tree_leaves(tree):
+        if hasattr(l, "nbytes"):
+            total += int(l.nbytes)
+        elif hasattr(l, "shape") and hasattr(l, "dtype"):
+            total += int(np.prod(l.shape)) * np.dtype(l.dtype).itemsize
+    return total

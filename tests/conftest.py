@@ -1,0 +1,35 @@
+import os
+import sys
+
+# tests must see exactly ONE device (the dry-run sets 512 itself)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.transformer import ModelConfig, TransformerAdapter, init_params
+
+
+@pytest.fixture(scope="session")
+def tiny_cfg():
+    return ModelConfig(name="tiny", arch_type="dense", n_layers=2, d_model=64,
+                       n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
+                       vocab_size=97)
+
+
+@pytest.fixture(scope="session")
+def tiny_params(tiny_cfg):
+    return init_params(jax.random.PRNGKey(0), tiny_cfg)
+
+
+@pytest.fixture(scope="session")
+def tiny_adapter(tiny_cfg):
+    return TransformerAdapter(tiny_cfg)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

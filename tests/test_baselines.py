@@ -1,0 +1,120 @@
+"""Competing offloading baselines (§4.2): selection quality + I/O patterns."""
+
+import numpy as np
+import pytest
+
+from repro.core import baselines as B
+from repro.core.hardware import ModelDims
+from repro.core.offload import EMMC, NVME
+
+
+HK, D = 4, 32
+DIMS = ModelDims(d_model=512, n_heads=8, n_kv_heads=HK, head_dim=D, d_ff=1024)
+
+
+def _lowrank_kv(rng, n, true_rank=8):
+    feat = HK * D
+    basis = rng.standard_normal((true_rank, feat))
+    k = (rng.standard_normal((n, true_rank)) @ basis).reshape(n, HK, D)
+    v = rng.standard_normal((n, HK, D))
+    return k.astype(np.float32), v.astype(np.float32)
+
+
+def _policies():
+    return [
+        B.FlexGenPolicy(HK, D),
+        B.InfiniGenPolicy(HK, D),
+        B.InfiniGenPolicy(HK, D, head_agg=True),
+        B.InfiniGenPolicy(HK, D, head_agg=True, reuse=True),
+        B.ShadowKVPolicy(HK, D, rank=32),
+        B.LokiPolicy(HK, D, rank=16),
+        B.KVSwapPolicy(HK, D, group_size=4, rank=16),
+    ]
+
+
+@pytest.mark.parametrize("policy", _policies(), ids=lambda p: p.name)
+def test_selection_well_formed(policy, rng):
+    k, v = _lowrank_kv(rng, 256)
+    q = rng.standard_normal((8, D)).astype(np.float32)
+    policy.reset(256)
+    sel = policy.select(q, k, budget_tokens=64)
+    ids = sel.token_ids
+    assert len(ids) == len(np.unique(ids))
+    assert ids.min() >= 0 and ids.max() < 256
+    assert sel.io_bytes >= 0 and sel.io_requests >= 0
+
+
+def test_flexgen_reads_everything(rng):
+    k, v = _lowrank_kv(rng, 128)
+    q = rng.standard_normal((8, D)).astype(np.float32)
+    pol = B.FlexGenPolicy(HK, D)
+    sel = pol.select(q, k, 16)
+    assert len(sel.token_ids) == 128
+    assert sel.io_requests == 1  # one sequential read
+
+
+def test_kvswap_recall_beats_infinigen_under_tight_budget(rng):
+    """The paper's core quality claim: on low-intrinsic-rank keys, grouped
+    low-rank prediction retains recall where index-selection collapses."""
+    k, v = _lowrank_kv(rng, 512, true_rank=8)
+    kvswap = B.KVSwapPolicy(HK, D, group_size=4, rank=16, reuse=False)
+    infini = B.InfiniGenPolicy(HK, D, partial_ratio=16 / (HK * D))  # same memory
+    r_kv, r_ig = [], []
+    for i in range(8):
+        q = rng.standard_normal((8, D)).astype(np.float32)
+        r_kv.append(B.evaluate_policy(kvswap, q, k, v, 64).recall)
+        r_ig.append(B.evaluate_policy(infini, q, k, v, 64).recall)
+    assert np.mean(r_kv) > np.mean(r_ig) + 0.1, (np.mean(r_kv), np.mean(r_ig))
+
+
+def test_kvswap_io_fewer_requests_than_per_token(rng):
+    """Grouping must cut request count vs token-granular selection."""
+    k, v = _lowrank_kv(rng, 1024)
+    q = rng.standard_normal((8, D)).astype(np.float32)
+    kvswap = B.KVSwapPolicy(HK, D, group_size=8, rank=16, reuse=False)
+    loki = B.LokiPolicy(HK, D, rank=16)
+    s_kv = kvswap.select(q, k, 128)
+    s_lk = loki.select(q, k, 128)
+    assert s_kv.io_requests < s_lk.io_requests
+
+
+def test_reuse_cuts_io(rng):
+    k, v = _lowrank_kv(rng, 1024)
+    with_ru = B.KVSwapPolicy(HK, D, group_size=4, rank=16, reuse=True)
+    no_ru = B.KVSwapPolicy(HK, D, group_size=4, rank=16, reuse=False)
+    with_ru.reset(1024)
+    q = rng.standard_normal((8, D)).astype(np.float32)
+    tot_ru = tot_no = 0
+    for _ in range(6):
+        q = 0.95 * q + 0.05 * rng.standard_normal((8, D)).astype(np.float32)
+        tot_ru += with_ru.select(q, k, 128).io_bytes
+        tot_no += no_ru.select(q, k, 128).io_bytes
+    assert tot_ru < 0.6 * tot_no
+
+
+def test_throughput_ordering_matches_paper(rng):
+    """Tab. 4 ordering: KVSwap > InfiniGen*+ru ≥ ShadowKV > InfiniGen > FlexGen."""
+    common = dict(disk=NVME, dims=DIMS, n_layers=8, batch=4, n_ctx=1024,
+                  budget_tokens=128, n_steps=6)
+    tps = {}
+    for pol in [B.FlexGenPolicy(HK, D),
+                B.InfiniGenPolicy(HK, D),
+                B.InfiniGenPolicy(HK, D, head_agg=True, reuse=True),
+                B.KVSwapPolicy(HK, D, group_size=4, rank=16)]:
+        tps[pol.name] = B.simulate_throughput(pol, **common)["tokens_per_s"]
+    assert tps["kvswap"] > tps["infinigen*+ru"] > tps["infinigen"]
+    assert tps["kvswap"] > tps["flexgen"]  # flexgen's one sequential read can
+    # beat fragmented per-token I/O at small contexts; at 32K it loses (Tab. 4)
+
+
+def test_emmc_gap_larger_than_nvme(rng):
+    """Paper §5.2: the grouped-read advantage grows on slower disks."""
+    common = dict(dims=DIMS, n_layers=8, batch=4, n_ctx=1024,
+                  budget_tokens=128, n_steps=6)
+    out = {}
+    for disk in (NVME, EMMC):
+        kv = B.simulate_throughput(B.KVSwapPolicy(HK, D, group_size=8 if disk is EMMC else 4, rank=16),
+                                   disk=disk, **common)["tokens_per_s"]
+        ig = B.simulate_throughput(B.InfiniGenPolicy(HK, D), disk=disk, **common)["tokens_per_s"]
+        out[disk.name] = kv / ig
+    assert out["emmc"] > out["nvme"]

@@ -1,0 +1,98 @@
+"""Rolling buffer (§3.4.1) + reuse buffer (§3.4.3) invariants — including
+hypothesis property tests against a reference dict-model cache."""
+
+import collections
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.reuse_buffer import ReuseBuffer
+from repro.core.rolling_buffer import RollingBuffer
+
+
+def _mk_group(gid, g=4, hk=2, d=8):
+    out = np.full((g, 2, hk, d), float(gid), dtype=np.float32)
+    return out
+
+
+class TestRollingBuffer:
+    def test_flush_on_full_group(self):
+        rb = RollingBuffer(batch=2, group_size=3, n_kv_heads=2, head_dim=4)
+        for i in range(2):
+            assert rb.append(np.full((2, 2, 4), i), np.full((2, 2, 4), -i)) is None
+        out = rb.append(np.full((2, 2, 4), 2.0), np.full((2, 2, 4), -2.0))
+        assert out is not None
+        k, v = out
+        assert k.shape == (2, 3, 2, 4)
+        np.testing.assert_allclose(k[:, 2], 2.0)
+        np.testing.assert_allclose(v[:, 1], -1.0)
+        assert rb.fill == 0
+
+    def test_seed_tail(self):
+        rb = RollingBuffer(batch=1, group_size=4, n_kv_heads=2, head_dim=4)
+        rb.seed(np.ones((1, 2, 2, 4)), np.ones((1, 2, 2, 4)))
+        assert rb.fill == 2
+        k, v = rb.current()
+        assert k.shape == (1, 2, 2, 4)
+
+    def test_seed_too_long_raises(self):
+        rb = RollingBuffer(batch=1, group_size=2, n_kv_heads=2, head_dim=4)
+        with pytest.raises(ValueError):
+            rb.seed(np.ones((1, 2, 2, 4)), np.ones((1, 2, 2, 4)))
+
+
+class TestReuseBuffer:
+    def test_hit_miss_and_fifo_eviction(self):
+        rb = ReuseBuffer(batch=1, capacity=2, group_size=4, n_kv_heads=2, head_dim=8)
+        rb.insert(0, 10, _mk_group(10))
+        rb.insert(0, 11, _mk_group(11))
+        hits, misses = rb.lookup(0, [10, 12])
+        assert hits == [10] and misses == [12]
+        rb.insert(0, 12, _mk_group(12))  # evicts 10 (FIFO)
+        assert rb.resident(0) == {11, 12}
+        np.testing.assert_allclose(rb.get(0, 12), _mk_group(12))
+
+    def test_slot_table_consistency(self):
+        rb = ReuseBuffer(batch=1, capacity=3, group_size=4, n_kv_heads=2, head_dim=8)
+        for gid in (5, 6, 7, 8):
+            rb.insert(0, gid, _mk_group(gid))
+        for gid in rb.resident(0):
+            slot = rb._index[0][gid]
+            assert rb.slot_table[0, slot] == gid
+
+    def test_invalidate_frees_slot(self):
+        rb = ReuseBuffer(batch=1, capacity=2, group_size=4, n_kv_heads=2, head_dim=8)
+        rb.insert(0, 1, _mk_group(1))
+        rb.insert(0, 2, _mk_group(2))
+        rb.invalidate(0, 1)
+        rb.insert(0, 3, _mk_group(3))
+        assert rb.resident(0) == {2, 3}
+
+    @settings(max_examples=50, deadline=None)
+    @given(ops=st.lists(st.tuples(st.sampled_from(["insert", "lookup", "invalidate"]),
+                                  st.integers(0, 15)), max_size=60),
+           capacity=st.integers(1, 6))
+    def test_matches_reference_fifo_model(self, ops, capacity):
+        """Property: behaves exactly like a dict + deque FIFO cache."""
+        rb = ReuseBuffer(batch=1, capacity=capacity, group_size=2, n_kv_heads=1, head_dim=4)
+        ref = collections.OrderedDict()
+        for op, gid in ops:
+            if op == "insert":
+                rb.insert(0, gid, np.full((2, 2, 1, 4), gid, np.float32))
+                if gid not in ref:
+                    if len(ref) >= capacity:
+                        ref.popitem(last=False)
+                    ref[gid] = gid
+            elif op == "lookup":
+                hits, misses = rb.lookup(0, [gid])
+                assert (gid in ref) == (len(hits) == 1)
+            else:
+                rb.invalidate(0, gid)
+                ref.pop(gid, None)
+            assert rb.resident(0) == set(ref)
+            assert len(rb.resident(0)) <= capacity
+            # every resident group's contents are intact
+            for g in rb.resident(0):
+                assert rb.get(0, g)[0, 0, 0, 0] == g

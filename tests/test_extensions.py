@@ -1,0 +1,79 @@
+"""Beyond-paper extensions: int8 KV-on-disk (§7 low-bit), Pallas-kernel
+attention in the engine, and the bonus qwen3-8b (paper App. B) config."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.engine import EngineConfig, KVSwapEngine
+from repro.core.offload import KVDiskStore
+from repro.models.transformer import TransformerAdapter
+
+
+class TestInt8Store:
+    def test_roundtrip_error_small(self, rng):
+        with KVDiskStore(n_layers=1, batch=1, max_groups=8, group_size=4,
+                         n_kv_heads=2, head_dim=8, quant_bits=8) as store:
+            k = rng.standard_normal((1, 16, 2, 8)).astype(np.float32)
+            v = rng.standard_normal((1, 16, 2, 8)).astype(np.float32)
+            store.write_prefill(0, k, v)
+            ks, vs = store.read_groups(0, 0, [0, 1, 2, 3])
+            err = np.abs(ks.reshape(-1) - k[0].reshape(-1)).max()
+            scale = np.abs(k).max()
+            assert err <= scale / 127 * 1.01
+
+    def test_group_bytes_shrink(self):
+        kw = dict(n_layers=1, batch=1, max_groups=4, group_size=4,
+                  n_kv_heads=2, head_dim=8)
+        with KVDiskStore(**kw) as raw, KVDiskStore(quant_bits=8, **kw) as q8:
+            assert q8.group_nbytes * 4 == raw.group_nbytes  # f32 -> int8
+
+    def test_append_group_quantized(self, rng):
+        with KVDiskStore(n_layers=1, batch=2, max_groups=4, group_size=4,
+                         n_kv_heads=2, head_dim=8, quant_bits=8) as store:
+            store.write_prefill(0, np.zeros((2, 4, 2, 8), np.float32),
+                                np.zeros((2, 4, 2, 8), np.float32))
+            kg = rng.standard_normal((2, 4, 2, 8)).astype(np.float32)
+            store.append_group(0, kg, kg)
+            ks, _ = store.read_groups(0, 1, [1])
+            assert np.abs(ks[0] - kg[1]).max() <= np.abs(kg).max() / 127 * 1.01
+
+
+class TestEngineExtensions:
+    @pytest.fixture()
+    def setup(self, tiny_cfg, tiny_params, tiny_adapter, rng):
+        prompt = rng.integers(0, tiny_cfg.vocab_size, (2, 29)).astype(np.int32)
+        calib = rng.standard_normal((256, tiny_cfg.n_kv_heads, tiny_cfg.head_dim))
+        return tiny_cfg, tiny_params, tiny_adapter, prompt, calib
+
+    def _generate(self, setup, **cfg_kw):
+        cfg, params, adapter, prompt, calib = setup
+        feat = cfg.n_kv_heads * cfg.head_dim
+        ecfg = EngineConfig(group_size=4, n_select=32, rank=feat,
+                            reuse_capacity=32, max_seq=64,
+                            predict_from="self", **cfg_kw)
+        with KVSwapEngine(adapter, params, ecfg, batch=2, calib_k=calib) as eng:
+            return eng.generate(prompt, 6)
+
+    def test_pallas_attention_matches_reference(self, setup):
+        base = self._generate(setup)
+        pallas = self._generate(setup, use_pallas=True)
+        np.testing.assert_array_equal(base, pallas)
+
+    def test_int8_kv_close_to_fp(self, setup):
+        base = self._generate(setup)
+        q8 = self._generate(setup, kv_bits=8)
+        # int8 rounding may flip rare near-ties; most tokens must agree
+        assert (base == q8).mean() >= 0.8
+
+
+def test_bonus_qwen3_8b_config():
+    from repro.configs import registry
+    cfg = registry.get("qwen3-8b")
+    assert (cfg.n_layers, cfg.d_model, cfg.qk_norm) == (36, 4096, True)
+    assert "qwen3-8b" not in registry.list_archs()   # not in the assigned pool
+    smoke = registry.smoke("qwen3-8b")
+    params = registry.init_params(jax.random.PRNGKey(0), smoke)
+    from repro.models.transformer import forward
+    logits, _ = forward(params, smoke, jax.numpy.zeros((1, 8), jax.numpy.int32))
+    assert logits.shape == (1, 8, smoke.vocab_size)

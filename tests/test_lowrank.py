@@ -1,0 +1,71 @@
+"""K-cache low-rank compression (§3.2): SVD adapter properties."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.lowrank import (LowRankAdapter, append_compressed, compress_k,
+                                fit_adapter, reconstruction_error)
+
+
+def make_lowrank_k(rng, n, hk, d, true_rank):
+    feat = hk * d
+    u = rng.standard_normal((n, true_rank))
+    v = rng.standard_normal((true_rank, feat))
+    return (u @ v).reshape(n, hk, d).astype(np.float32)
+
+
+def test_adapter_shapes_and_sigma(rng):
+    k = rng.standard_normal((256, 4, 32)).astype(np.float32)
+    ad = fit_adapter(k, rank=16)
+    assert ad.a.shape == (128, 16)
+    assert ad.rank == 16
+    assert ad.sigma == pytest.approx(8.0)
+    ad2 = fit_adapter(k, sigma=8.0)
+    assert ad2.rank == 16
+
+
+def test_exact_recovery_at_true_rank(rng):
+    k = make_lowrank_k(rng, 512, 4, 32, true_rank=10)
+    ad = fit_adapter(k, rank=10)
+    assert reconstruction_error(k, ad) < 1e-5
+
+
+def test_error_monotone_in_rank(rng):
+    k = rng.standard_normal((512, 4, 32)).astype(np.float32)
+    errs = [reconstruction_error(k, fit_adapter(k, rank=r)) for r in (4, 16, 64, 128)]
+    assert all(a >= b - 1e-9 for a, b in zip(errs, errs[1:]))
+    assert errs[-1] < 1e-5  # full rank = exact
+
+
+def test_compress_shapes(rng):
+    k = rng.standard_normal((256, 4, 32)).astype(np.float32)
+    ad = fit_adapter(k, rank=16)
+    kb = jnp.asarray(rng.standard_normal((2, 64, 4, 32)), jnp.float32)
+    out = compress_k(kb, ad)
+    assert out.shape == (2, 64, 16)
+
+
+def test_append_compressed(rng):
+    k = rng.standard_normal((256, 4, 32)).astype(np.float32)
+    ad = fit_adapter(k, rank=16)
+    klr = jnp.zeros((2, 8, 16))
+    new_k = jnp.asarray(rng.standard_normal((2, 4, 4, 32)), jnp.float32)
+    out = append_compressed(klr, new_k, ad)
+    assert out.shape == (2, 12, 16)
+    np.testing.assert_allclose(np.asarray(out[:, 8:]),
+                               np.asarray(compress_k(new_k, ad)), rtol=1e-5)
+
+
+def test_batched_calibration_input(rng):
+    k = rng.standard_normal((2, 128, 4, 32)).astype(np.float32)
+    ad = fit_adapter(k, rank=16)
+    assert ad.a.shape == (128, 16)
+
+
+def test_rejects_bad_args(rng):
+    k = rng.standard_normal((64, 2, 8)).astype(np.float32)
+    with pytest.raises(ValueError):
+        fit_adapter(k)
+    with pytest.raises(ValueError):
+        fit_adapter(k, rank=4, sigma=4.0)

@@ -1,0 +1,98 @@
+"""Disk tier: DiskSpec timing model calibration + KVDiskStore correctness."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.offload import DISKS, EMMC, NVME, IOAccountant, KVDiskStore
+
+
+class TestDiskSpec:
+    def test_fig2_calibration_small_reads_underutilize(self):
+        """Paper Fig. 2: at 512 B the effective BW is < 6 % of peak."""
+        for spec in (NVME, EMMC):
+            assert spec.effective_bw(512) < 0.06 * spec.peak_bw
+
+    def test_large_reads_approach_peak(self):
+        for spec in (NVME, EMMC):
+            assert spec.effective_bw(4 << 20) > 0.9 * spec.peak_bw
+
+    def test_effective_bw_monotone_in_block_size(self):
+        for spec in (NVME, EMMC):
+            bws = [spec.effective_bw(b) for b in (512, 4096, 65536, 1 << 20)]
+            assert all(a <= b + 1e-9 for a, b in zip(bws, bws[1:]))
+
+    def test_read_amplification(self):
+        """A 1-byte read still pays a whole page."""
+        t1 = NVME.read_time(1)
+        tp = NVME.read_time(NVME.page_bytes)
+        assert t1 == pytest.approx(tp)
+
+    def test_fewer_requests_cheaper(self):
+        n = 64 * 4096
+        assert NVME.read_time(n, 1) < NVME.read_time(n, 64)
+
+
+class TestKVDiskStore:
+    def _mk(self, accountant=None):
+        return KVDiskStore(n_layers=2, batch=2, max_groups=8, group_size=4,
+                           n_kv_heads=2, head_dim=8, accountant=accountant)
+
+    def test_prefill_roundtrip(self, rng):
+        with self._mk() as store:
+            k = rng.standard_normal((2, 13, 2, 8)).astype(np.float32)
+            v = rng.standard_normal((2, 13, 2, 8)).astype(np.float32)
+            ng = store.write_prefill(0, k, v)
+            assert ng == 3  # 13 // 4
+            ks, vs = store.read_groups(0, 1, [0, 2])
+            np.testing.assert_allclose(ks[0], k[1, 0:4])
+            np.testing.assert_allclose(ks[1], k[1, 8:12])
+            np.testing.assert_allclose(vs[1], v[1, 8:12])
+
+    def test_append_group_and_read_all(self, rng):
+        with self._mk() as store:
+            k = rng.standard_normal((2, 8, 2, 8)).astype(np.float32)
+            v = rng.standard_normal((2, 8, 2, 8)).astype(np.float32)
+            store.write_prefill(0, k, v)
+            kg = rng.standard_normal((2, 4, 2, 8)).astype(np.float32)
+            store.append_group(0, kg, kg)
+            ka, va = store.read_all(0)
+            assert ka.shape == (2, 12, 2, 8)
+            np.testing.assert_allclose(ka[:, 8:], kg)
+
+    def test_accountant_coalesces_adjacent_groups(self, rng):
+        acc = IOAccountant(NVME)
+        with self._mk(acc) as store:
+            k = rng.standard_normal((2, 32, 2, 8)).astype(np.float32)
+            store.write_prefill(0, k, k)
+            acc.reset()
+            store.read_groups(0, 0, [1, 2, 3])      # adjacent → 1 request
+            assert acc.read_requests == 1
+            store.read_groups(0, 0, [0, 2, 5])      # 3 runs
+            assert acc.read_requests == 1 + 3
+            assert acc.read_bytes == 6 * store.group_nbytes
+
+    def test_overflow_raises(self, rng):
+        with self._mk() as store:
+            k = rng.standard_normal((2, 32, 2, 8)).astype(np.float32)
+            store.write_prefill(0, k, k)
+            kg = np.zeros((2, 4, 2, 8), np.float32)
+            with pytest.raises(RuntimeError):
+                store.append_group(0, kg, kg)
+
+    @settings(max_examples=20, deadline=None)
+    @given(seq=st.integers(4, 31), picks=st.lists(st.integers(0, 7), min_size=1, max_size=8))
+    def test_property_group_reads_match_source(self, seq, picks):
+        rng = np.random.default_rng(seq)
+        with self._mk() as store:
+            k = rng.standard_normal((2, seq, 2, 8)).astype(np.float32)
+            v = rng.standard_normal((2, seq, 2, 8)).astype(np.float32)
+            ng = store.write_prefill(1, k, v)
+            valid = sorted({p for p in picks if p < ng})
+            if not valid:
+                return
+            ks, vs = store.read_groups(1, 0, valid)
+            for j, g in enumerate(valid):
+                np.testing.assert_allclose(ks[j], k[0, g * 4:(g + 1) * 4])
+                np.testing.assert_allclose(vs[j], v[0, g * 4:(g + 1) * 4])

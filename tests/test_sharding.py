@@ -1,0 +1,82 @@
+"""Partition rules + shardability on the local (1-device) mesh."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import registry
+from repro.launch.mesh import make_smoke_mesh
+from repro.models.transformer import init_params
+from repro.sharding import partition as SP
+
+
+def test_param_specs_cover_all_leaves():
+    cfg = registry.smoke("llama4-maverick-400b-a17b")
+    params = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+    specs = SP.param_pspecs(params)
+    leaves_p = jax.tree_util.tree_leaves(params)
+    leaves_s = jax.tree_util.tree_leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(leaves_p) == len(leaves_s)
+
+
+def test_expert_axis_is_model_sharded():
+    cfg = registry.smoke("olmoe-1b-7b")
+    params = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+    specs = SP.param_pspecs(params)
+    moe_spec = specs["blocks"][0]["moe"]["w_gate"]
+    assert moe_spec == P("model", None, None)
+
+
+def test_attention_tp_specs():
+    cfg = registry.smoke("llama3-8b")
+    params = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+    specs = SP.param_pspecs(params)
+    blk = specs["blocks"][0]
+    assert blk["attn"]["wq"] == P(None, "model")
+    assert blk["attn"]["wo"] == P("model", None)
+    assert blk["attn_norm"]["scale"] == P()
+
+
+def test_sanitize_drops_indivisible():
+    mesh = jax.make_mesh((1,), ("model",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    # fake a 16-way mesh via explicit sizes check: use sanitize directly
+    class FakeMesh:
+        axis_names = ("data", "model")
+        class devices:
+            shape = (16, 16)
+    spec = SP.sanitize_spec(P("model", None), (51866, 1280), FakeMesh)
+    assert spec == P(None, None)
+    spec2 = SP.sanitize_spec(P(None, "model"), (2048, 8), FakeMesh)
+    assert spec2 == P(None, None)
+    spec3 = SP.sanitize_spec(P(None, "model"), (2048, 1024), FakeMesh)
+    assert spec3 == P(None, "model")
+
+
+def test_cache_specs_shapes_match_modes():
+    cfg = registry.smoke("zamba2-1.2b")
+    mesh = make_smoke_mesh()
+    batch_specs = SP.cache_pspecs(cfg, mesh, shard_seq=False, kvswap=True)
+    seq_specs = SP.cache_pspecs(cfg, mesh, shard_seq=True, kvswap=True)
+    # layer 1 is the shared_attn layer in the smoke pattern
+    assert batch_specs["layers"][1]["k"][0] in ("data", ("data",))
+    assert seq_specs["layers"][1]["k"][1] in ("data", ("data",))
+    assert "k_lr" in seq_specs["layers"][1]
+    # mamba layer state exists and has no seq axis
+    assert "ssm" in batch_specs["layers"][0]
+
+
+def test_sharded_forward_runs_on_local_mesh(rng):
+    """jit with in_shardings on the 1-device mesh — exercises the pjit path."""
+    cfg = registry.smoke("llama3-8b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    mesh = make_smoke_mesh()
+    shardings = SP.to_named_shardings(mesh, SP.param_pspecs(params, mesh))
+    from repro.models.transformer import forward
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 8)), jnp.int32)
+    with mesh:
+        fn = jax.jit(lambda p, t: forward(p, cfg, t)[0], in_shardings=(shardings, None))
+        out = fn(params, toks)
+    assert out.shape == (2, 8, cfg.vocab_size)
+    assert bool(jnp.isfinite(out).all())

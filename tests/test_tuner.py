@@ -1,0 +1,69 @@
+"""Offline parameter tuning (§3.5 / App. A)."""
+
+import json
+
+from repro.core import tuner
+from repro.core.hardware import ModelDims
+from repro.utils import MiB
+
+DIMS = ModelDims(d_model=4096, n_heads=32, n_kv_heads=8, head_dim=128, d_ff=14336)
+
+
+def _inputs(budget, disk="nvme", **kw):
+    return tuner.TunerInputs(dims=DIMS, n_layers=32, b_max=8, s_max=32768,
+                             budget_bytes=budget, disk=disk, **kw)
+
+
+def test_solution_respects_budget():
+    for disk in ("nvme", "emmc"):
+        for budget in (310 * MiB, 120 * MiB, 60 * MiB):
+            t = tuner.solve(_inputs(budget, disk))
+            assert t.mem_bytes <= budget, (disk, budget, t)
+
+
+def test_mg_const_preserved():
+    t = tuner.solve(_inputs(310 * MiB))
+    assert t.group_size * t.n_select <= 400
+    assert t.group_size * t.n_select >= 400 - t.group_size
+
+
+def test_nvme_relaxed_matches_paper_defaults():
+    """Paper: G=4 on NVMe at the relaxed budget, MG=400."""
+    t = tuner.solve(_inputs(310 * MiB, "nvme"))
+    assert t.group_size == 4
+    assert t.meets_overlap
+
+
+def test_emmc_prefers_larger_groups():
+    """Paper Tab. 2 footnote: best G is 4 for NVMe, 8 for eMMC."""
+    tn = tuner.solve(_inputs(310 * MiB, "nvme"))
+    te = tuner.solve(_inputs(310 * MiB, "emmc"))
+    assert te.group_size >= tn.group_size
+
+
+def test_tight_budget_compresses_harder():
+    tr = tuner.solve(_inputs(310 * MiB))
+    tt = tuner.solve(_inputs(120 * MiB))
+    assert tt.sigma >= tr.sigma
+    assert tt.mem_bytes <= tr.mem_bytes
+
+
+def test_reuse_lookup_interpolates():
+    table = {0: 0.0, 100: 1.0}
+    assert tuner.lookup_reuse(table, 50) == 0.5
+    assert tuner.lookup_reuse(table, 200) == 1.0
+
+
+def test_build_reuse_table_monotone_and_saturates():
+    table = tuner.build_reuse_table(step_overlap=0.77)
+    caps = sorted(table)
+    vals = [table[c] for c in caps]
+    assert all(a <= b + 0.02 for a, b in zip(vals, vals[1:]))
+    assert table[0] == 0.0
+    assert 0.5 <= table[1024] <= 1.0   # saturates once C covers the working set
+
+
+def test_solve_grid_serializes():
+    grid = tuner.solve_grid(_inputs(310 * MiB), b_step=4, s_step=16384, s_min=16384)
+    js = json.dumps(grid)
+    assert "b1_s16384" in grid and js
