@@ -8,10 +8,9 @@ partial-K and ShadowKV's low-rank-K+landmarks.
 
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import LLAMA3_8B, Timer, emit
-from repro.utils import GiB, MiB, fmt_bytes
+from repro.utils import GiB, fmt_bytes
 
 FP16 = 2
 

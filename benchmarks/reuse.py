@@ -8,7 +8,6 @@ with/without-reuse uplift on both disks.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import LLAMA3_8B, Timer, emit

@@ -8,7 +8,6 @@ is the relaxed 1/13 setting.
 
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import LLAMA3_8B, Timer, emit
 from repro.core import baselines as B

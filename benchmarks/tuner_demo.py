@@ -7,7 +7,6 @@ G=8-16 eMMC, MG=400, σ up to 32).
 
 from __future__ import annotations
 
-import json
 
 from benchmarks.common import LLAMA3_8B, Timer, emit
 from repro.core import tuner

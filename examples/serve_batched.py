@@ -32,6 +32,8 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=96)
     ap.add_argument("--gen-len", type=int, default=48)
     ap.add_argument("--disk", choices=("nvme", "emmc"), default="nvme")
+    ap.add_argument("--sync-io", action="store_true",
+                    help="disable the async prefetch pipeline (bit-identical)")
     args = ap.parse_args()
 
     cfg = ModelConfig(name="served", arch_type="dense", n_layers=4, d_model=128,
@@ -62,13 +64,14 @@ def main() -> None:
     ecfg = EngineConfig(group_size=4, n_select=n_sel, rank=16,
                         reuse_capacity=2 * n_sel,
                         max_seq=args.prompt_len + args.gen_len + 8,
-                        disk=args.disk)
+                        disk=args.disk, async_io=not args.sync_io)
     with KVSwapEngine(adapter, params, ecfg, batch=args.batch, calib_k=calib) as eng:
         got = eng.generate(prompts, args.gen_len)
         tput = eng.simulated_throughput()
         reuse = eng.reuse_ratio()
         mem = eng.metadata_bytes()
         on_disk = eng.store.total_bytes_on_disk()
+        overlap = eng.overlap_report()
 
     # Full-KV reference
     toks = jnp.asarray(prompts)
@@ -91,6 +94,12 @@ def main() -> None:
     print(f"modeled throughput     : {tput:.1f} tok/s on {args.disk}")
     print(f"KVSwap resident memory : {mem['total']} B "
           f"(full cache on disk: {on_disk} B)")
+    print(f"pipeline (modeled)     : io={overlap['io_seconds']*1e3:.3f} ms  "
+          f"compute={overlap['compute_seconds']*1e3:.3f} ms  "
+          f"pipelined={overlap['pipelined_seconds']*1e3:.3f} ms/step")
+    print(f"pipeline (measured)    : io_wait={overlap['io_wait_seconds']*1e3:.2f} ms "
+          f"of {overlap['wall_seconds']*1e3:.2f} ms/step "
+          f"({'async' if ecfg.async_io else 'sync'} mode)")
 
 
 if __name__ == "__main__":

@@ -5,12 +5,24 @@ jitted JAX.  The disk tier is the real memmap store; I/O *time* is modeled by
 the :class:`DiskSpec` accountant, and per-step latency is assembled with the
 paper's layer-pipelined overlap (I/O for layer *i* overlaps compute of layer
 *i−1*).
+
+Two execution modes, selected by :attr:`EngineConfig.async_io`:
+
+* **sync** (default) — every group read happens inline on the critical path,
+  exactly where the prediction for that layer lands;
+* **async** — the structural pipeline of §3.3/§3.4: as soon as layer *i*'s
+  input is available, the prediction for layer *i+1* is scored and its group
+  reads are handed to a background :class:`~repro.io.PrefetchWorker`; a
+  :class:`~repro.io.DoubleBuffer` holds layer *i+1*'s groups while layer *i*
+  computes.  The two modes run the same per-layer numeric code on the same
+  inputs, so decoded tokens are **bit-identical** — only wall-clock changes.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import Sequence
 
 import jax
@@ -25,11 +37,42 @@ from repro.core.offload import DISKS, DiskSpec, IOAccountant, KVDiskStore
 from repro.core.predictor import PredictorConfig
 from repro.core.reuse_buffer import ReuseBuffer
 from repro.core.rolling_buffer import RollingBuffer
+from repro.io import DoubleBuffer, PrefetchWorker, ReadScheduler
 
 
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
-    """Runtime parameters — the tuple the offline tuner (§3.5) produces."""
+    """Runtime parameters — the tuple the offline tuner (§3.5) produces.
+
+    Knob-by-knob (see ``docs/tuning.md`` for how the tuner picks them):
+
+    * ``group_size`` (**G**) — tokens per KV group, the unit of disk layout,
+      prediction, and transfer.  Larger G → bigger sequential reads (better
+      effective bandwidth, Fig. 2) but coarser selection.
+    * ``n_select`` (**M**) — groups preloaded per layer per decode step; the
+      attention budget is ``M·G`` tokens.
+    * ``rank`` (**r**) — low-rank adapter width for the compressed K cache;
+      compression ratio σ = ``H_k·d / r``.  Higher r → better prediction
+      recall, more resident metadata memory.
+    * ``reuse_capacity`` (**C**) — reuse-buffer slots (groups) per layer per
+      sequence; adjacent steps share 75–81 % of critical groups (Fig. 8), so
+      C converts memory into skipped disk reads.
+    * ``max_seq`` — KV capacity in tokens (bounds the memmap file).
+    * ``disk`` — which :class:`DiskSpec` prices modeled I/O ("nvme"/"emmc").
+    * ``predict_from`` — "prev" scores layer *i* from layer *i−1*'s input
+      (cross-layer similarity, §3.3), which is what makes prefetch
+      overlappable; "self" predicts from the layer's own input (exact timing
+      of InfiniGen-style online prediction, no overlap possible).
+    * ``kv_bits`` — 16 stores the raw dtype on disk; 8 stores per-group
+      scaled int8 (§7 "low-bit KV"), shrinking every group read.
+    * ``use_pallas`` — route gather-attention through the Pallas kernel.
+    * ``async_io`` — run group preloading on the background worker
+      (:mod:`repro.io`); bit-identical tokens, overlapped wall-clock.
+    * ``io_threads`` — prefetch worker threads (async mode only).
+    * ``coalesce_gap`` — largest unrequested-group gap the
+      :class:`ReadScheduler` reads through to keep a request sequential;
+      0 merges only strictly adjacent groups.
+    """
 
     group_size: int = 4            # G
     n_select: int = 100            # M (selected groups per layer per step)
@@ -42,6 +85,9 @@ class EngineConfig:
     use_pallas: bool = False       # route attention through the Pallas kernel
     dtype: str = "float32"
     compute: str = "jetson-orin-agx"  # timing model for simulated throughput
+    async_io: bool = False         # background prefetch pipeline (repro.io)
+    io_threads: int = 2            # PrefetchWorker pool size
+    coalesce_gap: int = 0          # ReadScheduler gap coalescing (groups)
 
     @property
     def disk_spec(self) -> DiskSpec:
@@ -54,11 +100,26 @@ class EngineConfig:
 
 @dataclasses.dataclass
 class StepStats:
-    io_seconds: float = 0.0
-    compute_seconds: float = 0.0
-    pipelined_seconds: float = 0.0
-    io_bytes: int = 0
-    io_requests: int = 0
+    """Per-decode-step accounting.
+
+    ``io/compute/pipelined_seconds`` are *modeled* (DiskSpec + ComputeSpec)
+    and identical between sync and async modes; ``wall_seconds`` and
+    ``io_wait_seconds`` are *measured* on the host, so async mode shows the
+    read time actually hidden under compute (``io_wait < io_seconds``-ish).
+    """
+
+    io_seconds: float = 0.0          # modeled disk-read time, summed over layers
+    compute_seconds: float = 0.0     # modeled compute time, summed over layers
+    pipelined_seconds: float = 0.0   # modeled layer-pipelined step latency
+    io_bytes: int = 0                # cumulative bytes read since engine start
+    io_requests: int = 0             # cumulative read requests since start
+    wall_seconds: float = 0.0        # measured wall time of this step
+    io_wait_seconds: float = 0.0     # measured wall time blocked on fetches
+
+    @property
+    def overlap_saved_seconds(self) -> float:
+        """Modeled time the pipeline hides: serial − pipelined."""
+        return max(0.0, self.io_seconds + self.compute_seconds - self.pipelined_seconds)
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
@@ -120,10 +181,19 @@ class KVSwapEngine:
                           head_dim=model.head_dim, dtype=cfg.np_dtype)
             for _ in range(n_kv_layers)
         ]
+        self.scheduler = ReadScheduler(max_gap=cfg.coalesce_gap)
         self.managers = [
-            KVCacheManager(store=self.store, reuse=self.reuse[j], rolling=self.rolling[j], layer=j)
+            KVCacheManager(store=self.store, reuse=self.reuse[j], rolling=self.rolling[j],
+                           layer=j, scheduler=self.scheduler)
             for j in range(n_kv_layers)
         ]
+        self.prefetcher: PrefetchWorker | None = None
+        if cfg.async_io:
+            self.prefetcher = PrefetchWorker(
+                self._fetch_table, n_threads=cfg.io_threads,
+                max_pending=max(4, 2 * max(n_kv_layers, 1)),
+                accountant=self.accountant,
+            )
         # recurrent state for non-KV (SSM / xLSTM) layers
         self.states: dict[int, object] = {}
         # Preallocated compressed K cache, one per KV layer: [B, cap_tokens, r]
@@ -143,6 +213,11 @@ class KVSwapEngine:
             head_dim=model.head_dim, d_ff=getattr(model, "d_ff", 4 * model.d_model),
         )
         self.step_log: list[StepStats] = []
+
+    # ------------------------------------------------------------------
+    def _fetch_table(self, j: int, ids: np.ndarray, mask: np.ndarray):
+        """The prefetch worker's unit of work: host-only group resolution."""
+        return self.managers[j].fetch(ids, mask)
 
     # ------------------------------------------------------------------
     def metadata_bytes(self) -> dict:
@@ -193,75 +268,153 @@ class KVSwapEngine:
 
     # ------------------------------------------------------------------
     def decode_step(self, token_ids: np.ndarray) -> jax.Array:
-        """Decode one token per sequence; returns logits ``[B, V]``."""
+        """Decode one token per sequence; returns logits ``[B, V]``.
+
+        Sync and async modes share every numeric call (prediction, gather,
+        block compute) on identical inputs, so their outputs are
+        bit-identical; async mode only moves the disk reads off the critical
+        path (§3.3's overlap)."""
         if self.seq_len + 1 > self.cap_tokens:
             raise RuntimeError("KV capacity exceeded; raise cfg.max_seq")
-        cfg = self.cfg
+        t0 = time.perf_counter()
         b = self.batch
         tok = jnp.asarray(token_ids).reshape(b, 1)
         pos = jnp.full((b,), self.seq_len, dtype=jnp.int32)
         x = self.model.embed(self.params, tok)[:, 0]
         valid = jnp.int32(self.valid_tokens)
 
-        stats = StepStats()
-        t_compute = []
-        t_io = []
-        x_prev = x
+        t_compute: list[float] = []
+        t_io: list[float] = []
         flush_rows: list[tuple[int, jax.Array]] = []
-        for layer in range(self.model.n_layers):
-            if self.layer_kinds[layer] == "state":
-                x_prev = x
-                x, self.states[layer] = self.model.decode_state_block(
-                    self.params, layer, x, pos, self.states[layer]
-                )
-                t_compute.append(
-                    hardware.decode_layer_time(
-                        self.compute_spec, self.dims, n_ctx=0, batch=b)
-                )
-                t_io.append(0.0)
-                continue
-            j = self._kv_index[layer]
-            pred_src = x if (cfg.predict_from == "self" or layer == 0) else x_prev
-            q_pred = self.model.predict_query(self.params, layer, pred_src, pos)
-            ids, mask = self._predict(j, q_pred, valid)
-            io_before = self.accountant.read_seconds
-            table = self.managers[j].fetch(np.asarray(ids), np.asarray(mask))
-            t_io.append(self.accountant.read_seconds - io_before)
-            k_ctx, v_ctx, tok_mask, _ = self.managers[j].gather(table)
-            x_prev = x
-            x, k_new, v_new = self.model.decode_block(
-                self.params, layer, x, pos,
-                jnp.asarray(k_ctx), jnp.asarray(v_ctx), jnp.asarray(tok_mask),
-            )
-            flushed = self.managers[j].append_token(
-                np.asarray(jax.device_get(k_new), dtype=cfg.np_dtype),
-                np.asarray(jax.device_get(v_new), dtype=cfg.np_dtype),
-            )
-            if flushed is not None:
-                # compress the completed group's keys exactly as stored on disk
-                k_g = jnp.asarray(flushed[0], dtype=jnp.float32)
-                flush_rows.append((j, compress_k(k_g, self.adapter)))
-            n_ctx = k_ctx.shape[1] + 1
-            t_compute.append(
-                hardware.decode_layer_time(
-                    self.compute_spec, self.dims, n_ctx=n_ctx, batch=b,
-                    rank=cfg.rank, n_lr_tokens=self.valid_tokens,
-                )
-            )
+        if self.prefetcher is not None:
+            x, io_wait = self._layers_async(x, pos, valid, t_compute, t_io, flush_rows)
+        else:
+            x, io_wait = self._layers_sync(x, pos, valid, t_compute, t_io, flush_rows)
+
         for layer, rows in flush_rows:
             self.k_lr[layer] = _klr_append(self.k_lr[layer], rows, jnp.int32(self.valid_tokens))
         if flush_rows:
-            self.valid_tokens += cfg.group_size
+            self.valid_tokens += self.cfg.group_size
         self.seq_len += 1
 
+        stats = StepStats()
         stats.io_seconds = sum(t_io)
         stats.compute_seconds = sum(t_compute)
         stats.pipelined_seconds = self._pipeline_latency(t_compute, t_io)
         snap = self.accountant.snapshot()
         stats.io_bytes = snap["read_bytes"]
         stats.io_requests = snap["read_requests"]
+        stats.io_wait_seconds = io_wait
+        stats.wall_seconds = time.perf_counter() - t0
         self.step_log.append(stats)
         return self.model.logits(self.params, x)
+
+    # -- per-layer pieces shared by both modes --------------------------
+    def _predict_for(self, layer: int, j: int, pred_src: jax.Array, pos: jax.Array,
+                     valid: jax.Array) -> tuple[np.ndarray, np.ndarray]:
+        """Score + select layer ``layer``'s critical groups from ``pred_src``."""
+        q_pred = self.model.predict_query(self.params, layer, pred_src, pos)
+        ids, mask = self._predict(j, q_pred, valid)
+        return np.asarray(ids), np.asarray(mask)
+
+    def _state_layer(self, layer: int, x: jax.Array, pos: jax.Array,
+                     t_compute: list[float]) -> jax.Array:
+        x, self.states[layer] = self.model.decode_state_block(
+            self.params, layer, x, pos, self.states[layer]
+        )
+        t_compute.append(
+            hardware.decode_layer_time(self.compute_spec, self.dims, n_ctx=0,
+                                       batch=self.batch)
+        )
+        return x
+
+    def _kv_layer(self, layer: int, j: int, x: jax.Array, pos: jax.Array, table,
+                  t_compute: list[float], flush_rows: list) -> jax.Array:
+        cfg = self.cfg
+        k_ctx, v_ctx, tok_mask, _ = self.managers[j].gather(table)
+        x, k_new, v_new = self.model.decode_block(
+            self.params, layer, x, pos,
+            jnp.asarray(k_ctx), jnp.asarray(v_ctx), jnp.asarray(tok_mask),
+        )
+        flushed = self.managers[j].append_token(
+            np.asarray(jax.device_get(k_new), dtype=cfg.np_dtype),
+            np.asarray(jax.device_get(v_new), dtype=cfg.np_dtype),
+        )
+        if flushed is not None:
+            # compress the completed group's keys exactly as stored on disk
+            k_g = jnp.asarray(flushed[0], dtype=jnp.float32)
+            flush_rows.append((j, compress_k(k_g, self.adapter)))
+        n_ctx = k_ctx.shape[1] + 1
+        t_compute.append(
+            hardware.decode_layer_time(
+                self.compute_spec, self.dims, n_ctx=n_ctx, batch=self.batch,
+                rank=cfg.rank, n_lr_tokens=self.valid_tokens,
+            )
+        )
+        return x
+
+    # -- synchronous path ------------------------------------------------
+    def _layers_sync(self, x, pos, valid, t_compute, t_io, flush_rows):
+        """Seed behavior: predict + fetch inline, on the critical path."""
+        io_wait = 0.0
+        x_prev = x
+        for layer in range(self.model.n_layers):
+            if self.layer_kinds[layer] == "state":
+                x_prev = x
+                x = self._state_layer(layer, x, pos, t_compute)
+                t_io.append(0.0)
+                continue
+            j = self._kv_index[layer]
+            pred_src = x if (self.cfg.predict_from == "self" or layer == 0) else x_prev
+            ids, mask = self._predict_for(layer, j, pred_src, pos, valid)
+            w0 = time.perf_counter()
+            with self.accountant.track() as tr:
+                table = self.managers[j].fetch(ids, mask)
+            io_wait += time.perf_counter() - w0
+            t_io.append(tr.read_seconds)
+            x_prev = x
+            x = self._kv_layer(layer, j, x, pos, table, t_compute, flush_rows)
+        return x, io_wait
+
+    # -- asynchronous pipeline (§3.3 / §3.4) ----------------------------
+    def _layers_async(self, x, pos, valid, t_compute, t_io, flush_rows):
+        """Issue layer *i+1*'s fetch as soon as its prediction source exists.
+
+        With ``predict_from="prev"``, layer *L* is scored from layer *L−1*'s
+        input — which is in hand *before* layer *L−1* computes, so the fetch
+        rides the worker while compute proceeds.  ``predict_from="self"``
+        degenerates to issue-then-wait (no overlap), matching the paper's
+        argument for cross-layer prediction.
+        """
+        # source-layer index → kv layers predicted from that layer's input
+        issue_at: dict[int, list[int]] = {}
+        for L in self.kv_layers:
+            src = L if (self.cfg.predict_from == "self" or L == 0) else L - 1
+            issue_at.setdefault(src, []).append(L)
+        buf = DoubleBuffer(depth=2)
+        io_wait = 0.0
+        try:
+            for layer in range(self.model.n_layers):
+                # `x` is the input to `layer` here: stage every kv layer
+                # whose prediction source this is (the sync path's x_prev)
+                for L in issue_at.get(layer, ()):
+                    jj = self._kv_index[L]
+                    ids, mask = self._predict_for(L, jj, x, pos, valid)
+                    buf.stage(jj, self.prefetcher.submit(jj, ids, mask))
+                if self.layer_kinds[layer] == "state":
+                    x = self._state_layer(layer, x, pos, t_compute)
+                    t_io.append(0.0)
+                    continue
+                j = self._kv_index[layer]
+                w0 = time.perf_counter()
+                res = buf.take(j)
+                io_wait += time.perf_counter() - w0
+                t_io.append(res.io_seconds)
+                x = self._kv_layer(layer, j, x, pos, res.table, t_compute, flush_rows)
+        except BaseException:
+            buf.drain()   # never leave staged futures behind on an error
+            raise
+        return x, io_wait
 
     def _predict(self, layer: int, q_pred: jax.Array, valid: jax.Array):
         """Grouped critical-KV prediction against the compressed K cache.
@@ -314,7 +467,26 @@ class KVSwapEngine:
         t = sum(s.pipelined_seconds for s in steps) / len(steps)
         return self.batch / t if t > 0 else 0.0
 
+    def overlap_report(self, skip: int = 1) -> dict:
+        """Mean per-step modeled + measured overlap (benchmarks / serving)."""
+        steps = self.step_log[skip:] or self.step_log
+        if not steps:
+            return {}
+        n = len(steps)
+        mean = lambda f: sum(f(s) for s in steps) / n
+        return {
+            "io_seconds": mean(lambda s: s.io_seconds),
+            "compute_seconds": mean(lambda s: s.compute_seconds),
+            "pipelined_seconds": mean(lambda s: s.pipelined_seconds),
+            "overlap_saved_seconds": mean(lambda s: s.overlap_saved_seconds),
+            "wall_seconds": mean(lambda s: s.wall_seconds),
+            "io_wait_seconds": mean(lambda s: s.io_wait_seconds),
+        }
+
     def close(self):
+        if self.prefetcher is not None:
+            self.prefetcher.close()
+            self.prefetcher = None
         if self.cfg.use_pallas:
             from repro.models import layers as _L
             _L.set_use_pallas(False)

@@ -21,6 +21,7 @@ import numpy as np
 from repro.core.offload import KVDiskStore
 from repro.core.reuse_buffer import ReuseBuffer
 from repro.core.rolling_buffer import RollingBuffer
+from repro.io.scheduler import ReadScheduler
 
 REGION_REUSE = 0
 REGION_ROLLING = 1
@@ -43,16 +44,28 @@ class MappingTable:
 
 
 class KVCacheManager:
-    """Per-layer runtime state binding the store, reuse and rolling buffers."""
+    """Per-layer runtime state binding the store, reuse and rolling buffers.
 
-    def __init__(self, *, store: KVDiskStore, reuse: ReuseBuffer, rolling: RollingBuffer, layer: int):
+    ``fetch`` is the unit of work the async :class:`repro.io.PrefetchWorker`
+    services off the critical path: it only touches host memory (reuse slots,
+    memmap reads) so it is safe to run on a worker thread, as long as no two
+    fetches for the *same* layer run concurrently (the worker's per-layer
+    queue guarantees that).
+    """
+
+    def __init__(self, *, store: KVDiskStore, reuse: ReuseBuffer, rolling: RollingBuffer,
+                 layer: int, scheduler: ReadScheduler | None = None):
         self.store = store
         self.reuse = reuse
         self.rolling = rolling
         self.layer = layer
+        self.scheduler = scheduler or ReadScheduler(max_gap=0)
 
     def fetch(self, group_ids: np.ndarray, group_mask: np.ndarray) -> MappingTable:
         """Resolve selected groups: reuse hits stay put, misses load from disk.
+
+        Misses are planned by the :class:`ReadScheduler` into sorted,
+        coalesced sequential runs before touching the store (§3.4.4).
 
         ``group_ids, group_mask``: ``[B, M]``.
         """
@@ -66,10 +79,11 @@ class KVCacheManager:
             want = list(dict.fromkeys(want))
             want_set = set(want)
             _, misses = self.reuse.lookup(bi, want)
-            if misses:
-                k_m, v_m = self.store.read_groups(self.layer, bi, misses)
-                for j, gid in enumerate(sorted(misses)):
-                    kv = np.stack([k_m[j], v_m[j]], axis=1)  # [G, 2, Hkv, d]
+            for run in self.scheduler.plan(misses):
+                k_r, v_r = self.store.read_run(self.layer, bi, run.start, run.count)
+                for gid in run.ids:
+                    off = gid - run.start
+                    kv = np.stack([k_r[off], v_r[off]], axis=1)  # [G, 2, Hkv, d]
                     # current working set is pinned; overflow stays staged
                     if self.reuse.insert(bi, gid, kv, protected=want_set) is None:
                         staged[(bi, gid)] = kv

@@ -18,13 +18,17 @@ Two pieces:
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import math
 import os
 import tempfile
-from typing import Iterable, Sequence
+import threading
+from typing import Sequence
 
 import numpy as np
+
+from repro.io.scheduler import ReadScheduler
 
 
 @dataclasses.dataclass(frozen=True)
@@ -69,34 +73,87 @@ NVME = DiskSpec("nvme", peak_bw=1.8e9, page_bytes=4096, request_latency=3.5e-6)
 EMMC = DiskSpec("emmc", peak_bw=250e6, page_bytes=4096, request_latency=20e-6)
 DISKS = {"nvme": NVME, "emmc": EMMC}
 
+# default plan: merge strictly adjacent ids only (no gap waste)
+_ADJACENT = ReadScheduler(max_gap=0)
+
+
+@dataclasses.dataclass
+class IOTracker:
+    """Per-scope I/O counters captured by :meth:`IOAccountant.track`."""
+
+    read_bytes: int = 0
+    read_requests: int = 0
+    write_bytes: int = 0
+    write_requests: int = 0
+    read_seconds: float = 0.0
+    write_seconds: float = 0.0
+
 
 class IOAccountant:
-    """Accumulates modeled I/O time + byte/request counters per decode step."""
+    """Accumulates modeled I/O time + byte/request counters per decode step.
+
+    Thread-safe: the prefetch worker charges reads from its own threads while
+    the engine's main thread charges rolling-buffer-flush writes.  ``track()``
+    opens a *thread-local* scope that additionally captures the charges made
+    by the current thread — the engine and the worker use it to attribute
+    modeled seconds to one fetch without a second accountant.
+    """
 
     def __init__(self, spec: DiskSpec):
         self.spec = spec
+        self._lock = threading.Lock()
+        self._local = threading.local()
         self.reset()
 
     def reset(self) -> None:
-        self.read_bytes = 0
-        self.read_requests = 0
-        self.write_bytes = 0
-        self.write_requests = 0
-        self.read_seconds = 0.0
-        self.write_seconds = 0.0
+        with self._lock:
+            self.read_bytes = 0
+            self.read_requests = 0
+            self.write_bytes = 0
+            self.write_requests = 0
+            self.read_seconds = 0.0
+            self.write_seconds = 0.0
+
+    @contextlib.contextmanager
+    def track(self):
+        """Scope capturing this thread's charges into an :class:`IOTracker`."""
+        tr = IOTracker()
+        stack = self._local.__dict__.setdefault("stack", [])
+        stack.append(tr)
+        try:
+            yield tr
+        finally:
+            # scopes are strictly LIFO per thread; pop by position, not value
+            # (zeroed IOTrackers compare equal, so remove() could hit the
+            # wrong one)
+            assert stack[-1] is tr
+            stack.pop()
+
+    def _trackers(self) -> list[IOTracker]:
+        return self._local.__dict__.get("stack", [])
 
     def charge_read(self, n_bytes: int, n_requests: int = 1) -> float:
         t = self.spec.read_time(n_bytes, n_requests)
-        self.read_bytes += n_bytes
-        self.read_requests += n_requests
-        self.read_seconds += t
+        with self._lock:
+            self.read_bytes += n_bytes
+            self.read_requests += n_requests
+            self.read_seconds += t
+        for tr in self._trackers():
+            tr.read_bytes += n_bytes
+            tr.read_requests += n_requests
+            tr.read_seconds += t
         return t
 
     def charge_write(self, n_bytes: int, n_requests: int = 1) -> float:
         t = self.spec.write_time(n_bytes, n_requests)
-        self.write_bytes += n_bytes
-        self.write_requests += n_requests
-        self.write_seconds += t
+        with self._lock:
+            self.write_bytes += n_bytes
+            self.write_requests += n_requests
+            self.write_seconds += t
+        for tr in self._trackers():
+            tr.write_bytes += n_bytes
+            tr.write_requests += n_requests
+            tr.write_seconds += t
         return t
 
     def snapshot(self) -> dict:
@@ -236,25 +293,45 @@ class KVDiskStore:
             self.accountant.charge_write(self.batch * self.group_nbytes, self.batch)
 
     # -- reads ------------------------------------------------------------
-    def read_groups(self, layer: int, batch_idx: int, group_ids: Sequence[int]) -> tuple[np.ndarray, np.ndarray]:
+    def read_run(self, layer: int, batch_idx: int, start: int, count: int) -> tuple[np.ndarray, np.ndarray]:
+        """Execute one coalesced run: a single sequential read of ``count``
+        groups starting at ``start`` (a :class:`repro.io.scheduler.ReadRun`).
+
+        Returns ``(k, v)`` each ``[count, G, H_kv, d]``.  Charged to the
+        accountant as **one** request of ``count * group_nbytes`` bytes —
+        gap groups a gap-coalescing scheduler reads through are real bytes
+        moved, so they are billed too.
+        """
+        if start < 0 or start + count > self.max_groups:
+            raise IndexError(
+                f"run [{start}, {start + count}) outside [0, {self.max_groups})")
+        blk = np.asarray(self._mm[layer, batch_idx, start:start + count])
+        if self.quant_bits == 8:
+            blk = self._dequant(blk, self._scales[layer, batch_idx, start:start + count])
+        if self.accountant is not None:
+            self.accountant.charge_read(count * self.group_nbytes, 1)
+        return blk[:, :, 0], blk[:, :, 1]
+
+    def read_groups(self, layer: int, batch_idx: int, group_ids: Sequence[int],
+                    scheduler: ReadScheduler | None = None) -> tuple[np.ndarray, np.ndarray]:
         """Read selected groups for one sequence.
 
-        Returns ``(k, v)`` each ``[n_sel, G, H_kv, d]``.  Each group is one
-        contiguous read; *adjacent* requested groups coalesce into a single
-        larger request (the runtime sorts its miss list — §3.4.4).
+        Plans the access with a :class:`~repro.io.scheduler.ReadScheduler`
+        (default: merge strictly adjacent ids — §3.4.4) and executes one
+        :meth:`read_run` per coalesced run.  Returns ``(k, v)`` each
+        ``[n_sel, G, H_kv, d]`` in sorted, de-duplicated group-id order.
         """
-        ids = np.asarray(sorted(int(g) for g in group_ids), dtype=np.int64)
-        n = len(ids)
-        if n == 0:
+        plan = (scheduler or _ADJACENT).plan(group_ids)
+        if not plan:
             empty = np.empty((0, self.group_size, self.n_kv_heads, self.head_dim), self.dtype)
             return empty, empty.copy()
-        blk = self._mm[layer, batch_idx, ids]  # [n, G, 2, H_kv, d] (fancy index -> copy)
-        if self.quant_bits == 8:
-            blk = self._dequant(blk, self._scales[layer, batch_idx, ids])
-        if self.accountant is not None:
-            runs = 1 + int(np.sum(np.diff(ids) != 1))
-            self.accountant.charge_read(n * self.group_nbytes, runs)
-        return blk[:, :, 0], blk[:, :, 1]
+        ks, vs = [], []
+        for run in plan:
+            k_r, v_r = self.read_run(layer, batch_idx, run.start, run.count)
+            for gid in run.ids:
+                ks.append(k_r[gid - run.start])
+                vs.append(v_r[gid - run.start])
+        return np.stack(ks), np.stack(vs)
 
     def read_all(self, layer: int) -> tuple[np.ndarray, np.ndarray]:
         """FlexGen-style full-layer restore: one big sequential read per row."""

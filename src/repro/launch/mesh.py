@@ -10,16 +10,23 @@ from __future__ import annotations
 import jax
 
 
+def make_mesh_auto(shape, axes):
+    """``jax.make_mesh`` with Auto axis types where the installed jax has
+    them (>= 0.5); older jax has no ``jax.sharding.AxisType`` and Auto is
+    its only behavior, so omitting the argument is equivalent."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes, axis_types=(axis_type.Auto,) * len(axes))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh_auto(shape, axes)
 
 
 def make_smoke_mesh(n_devices: int | None = None):
     """Tiny mesh over whatever devices exist (tests / examples)."""
     n = n_devices or len(jax.devices())
-    return jax.make_mesh(
-        (1, n), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh_auto((1, n), ("data", "model"))

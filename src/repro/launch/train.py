@@ -14,7 +14,6 @@ from __future__ import annotations
 import argparse
 
 import jax
-import jax.numpy as jnp
 
 from repro.checkpoint import save_pytree
 from repro.configs import registry

@@ -17,7 +17,6 @@ device-resident (it is small: ~1.5K frames).
 from __future__ import annotations
 
 import dataclasses
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -20,7 +20,6 @@ and lowers under pjit for the multi-pod dry-run.
 from __future__ import annotations
 
 import dataclasses
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -43,6 +42,12 @@ class KVSwapServeConfig:
     # that into whole-shard select chains — measured 4x the step's HBM
     # traffic).  ``flush_rolling`` merges full groups back, 1/G amortized.
     rolling: bool = False
+    # §3.3 cross-layer prediction, device edition: "prev" scores layer i's
+    # groups with a query projected from layer i−1's *input*, so the gather
+    # for layer i has no data dependence on layer i−1's attention output —
+    # XLA's scheduler is free to overlap it, mirroring the disk engine's
+    # async prefetch.  "self" (default) scores from the layer's own input.
+    predict_from: str = "self"
 
     @property
     def rb_len(self) -> int:
@@ -155,23 +160,29 @@ def _full_decode_attn(q, ent, length, k_new, v_new):
 
 
 def _kvswap_decode_attn(q, ent, adapter, length, k_new, v_new, scfg: KVSwapServeConfig,
-                        n_kv_heads: int, main_len=None):
+                        n_kv_heads: int, main_len=None, q_pred=None):
     """Grouped low-rank selection + gathered attention (Eq. 1 / §3.3).
 
     With ``scfg.rolling``, selection covers only the flushed prefix
     (``main_len`` tokens) and the rolling buffer's recent tokens are always
     attended (§3.4.1) — identical semantics to the disk engine.
+
+    ``q_pred`` is the query used for *scoring* only (cross-layer prediction:
+    projected from the previous layer's input); attention itself always uses
+    the true ``q``.  Defaults to ``q`` ("self" prediction).
     """
     b, h, d = q.shape
     g, m = scfg.group_size, scfg.n_select
     n = ent["k"].shape[1]
     n_groups = n // g
     flushed = length if main_len is None else main_len
+    if q_pred is None:
+        q_pred = q
 
     # Eq. 1: low-rank queries per head, shared-K-head adapter slices
     a3 = adapter.reshape(n_kv_heads, d, -1)            # [Hk, d, r]
     a_h = jnp.repeat(a3, h // n_kv_heads, axis=0)      # [H, d, r]
-    q_lr = jnp.einsum("bhd,hdr->bhr", q, a_h)          # [B,H,r]
+    q_lr = jnp.einsum("bhd,hdr->bhr", q_pred, a_h)     # [B,H,r]
     scores = jnp.einsum("bhr,bnr->bn", q_lr, ent["k_lr"])  # head-summed
     pos = jnp.arange(n)
     scores = jnp.where((pos < flushed)[None, :], scores, NEG)
@@ -277,7 +288,9 @@ def serve_step(params, cfg, tokens, cache, *, kvswap: KVSwapServeConfig | None =
         x = params["embed"][tokens[:, 0]]
     layers = list(cache["layers"])
     kv_idx = 0
+    x_prev = x   # input to the previous block (cross-layer prediction source)
     for i, kind in enumerate(blocks):
+        x_in = x
         if kind in ATTN_KINDS:
             if whisper:
                 blk = params["dec_blocks"][i]
@@ -287,6 +300,16 @@ def serve_step(params, cfg, tokens, cache, *, kvswap: KVSwapServeConfig | None =
                 from repro.models.transformer import _attn_params
                 nb, attn_p, mlp_holder = _attn_params(params, cfg, i)
                 nb_norm = lambda t: L.rmsnorm(nb["attn_norm"], t)
+
+            def _q_of(t):
+                """Layer i's query projection of an arbitrary residual input."""
+                qq = (nb_norm(t) @ attn_p["wq"]).reshape(b, cfg.n_heads, cfg.head_dim)
+                if not whisper:
+                    if cfg.qk_norm:
+                        qq = L.rmsnorm(attn_p["q_norm"], qq)
+                    qq = L.apply_rope(qq[:, None], pos[:, None], cfg.rope_theta)[:, 0]
+                return qq
+
             h = nb_norm(x)
             q = (h @ attn_p["wq"]).reshape(b, cfg.n_heads, cfg.head_dim)
             k_new = (h @ attn_p["wk"]).reshape(b, cfg.n_kv_heads, cfg.head_dim)
@@ -300,9 +323,14 @@ def serve_step(params, cfg, tokens, cache, *, kvswap: KVSwapServeConfig | None =
             ent = layers[i]
             rolling = kvswap is not None and kvswap.rolling
             if kvswap is not None:
+                # §3.3: score from the previous block's input so the group
+                # gather carries no dependence on this step's earlier layers
+                q_pred = (_q_of(x_prev)
+                          if kvswap.predict_from == "prev" and i > 0 else None)
                 o = _kvswap_decode_attn(q, ent, params["kvswap_adapters"][kv_idx],
                                         length, k_new, v_new, kvswap, cfg.n_kv_heads,
-                                        main_len=cache["main_len"] if rolling else None)
+                                        main_len=cache["main_len"] if rolling else None,
+                                        q_pred=q_pred)
             else:
                 o = _full_decode_attn(q, ent, length, k_new, v_new)
             x = x + o.reshape(b, -1) @ attn_p["wo"]
@@ -359,6 +387,7 @@ def serve_step(params, cfg, tokens, cache, *, kvswap: KVSwapServeConfig | None =
                 y, st = S.slstm_step(blk["slstm"], h, layers[i])
             x = x + y
             layers[i] = st
+        x_prev = x_in
     if whisper:
         x = L.layernorm(params["final_norm"], x)
         logits = x @ params["embed"].T

@@ -23,7 +23,6 @@ last shard (it owns the append position).
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -9,6 +9,12 @@ batch 1-16).  This scheduler gives the engine a request-queue front end:
   common start; simpler and faithful to the fixed-batch engine),
 * one engine instance serves the batch to each request's ``max_new``.
 
+With ``engine_cfg.async_io=True`` the batch decodes through the engine's
+background prefetch pipeline (``repro.io``): group reads for layer *i+1*
+are issued as soon as layer *i*'s prediction scores exist, so the batch's
+disk time hides under compute.  Tokens are bit-identical either way;
+``last_stats`` reports the modeled and measured overlap per flush.
+
 Greedy sampling by default; plug a ``sampler(logits) -> token_ids`` for
 temperature/top-k.
 """
@@ -95,7 +101,9 @@ class BatchServer:
                         outs[i].append(int(nxt[i]))
                 logits = eng.decode_step(nxt)
             stats = {"reuse_ratio": eng.reuse_ratio(),
-                     "throughput": eng.simulated_throughput()}
+                     "throughput": eng.simulated_throughput(),
+                     "async_io": self.cfg.async_io,
+                     **eng.overlap_report()}
 
         for i, r in enumerate(reqs[:real]):
             r.output = np.asarray(outs[i][: r.max_new], np.int32)

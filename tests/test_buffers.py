@@ -5,11 +5,12 @@ import collections
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from conftest import hypothesis_or_stubs
 
 from repro.core.reuse_buffer import ReuseBuffer
 from repro.core.rolling_buffer import RollingBuffer
+
+given, settings, st = hypothesis_or_stubs()
 
 
 def _mk_group(gid, g=4, hk=2, d=8):

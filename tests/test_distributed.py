@@ -9,12 +9,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.launch.mesh import make_mesh_auto
 from repro.serving.distributed import make_seqshard_decode_attn, reference_decode_attn
 
 
 def test_single_shard_matches_reference(rng):
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh_auto((1,), ("data",))
     b, h, hk, d, n, r, g, m = 1, 4, 2, 16, 64, 8, 4, 8
     q = jnp.asarray(rng.standard_normal((b, h, d)), jnp.float32)
     a = jnp.asarray(rng.standard_normal((hk * d, r)), jnp.float32)
@@ -44,11 +44,11 @@ def test_multi_shard_matches_reference_subprocess():
         import sys
         sys.path.insert(0, "src")
         import jax, jax.numpy as jnp, numpy as np
+        from repro.launch.mesh import make_mesh_auto
         from repro.serving.distributed import (make_seqshard_decode_attn,
                                                reference_decode_attn)
         rng = np.random.default_rng(0)
-        mesh = jax.make_mesh((4,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh_auto((4,), ("data",))
         b, h, hk, d, n, r, g, m = 2, 8, 2, 16, 256, 8, 4, 16
         q = jnp.asarray(rng.standard_normal((b, h, d)), jnp.float32)
         a = jnp.asarray(rng.standard_normal((hk * d, r)), jnp.float32)

@@ -1,6 +1,5 @@
 """KVSwap engine: exactness under full coverage, hybrid support, accounting."""
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -8,7 +7,6 @@ import numpy as np
 import pytest
 
 from repro.core.engine import EngineConfig, KVSwapEngine
-from repro.core.lowrank import fit_adapter
 from repro.models.transformer import (ModelConfig, TransformerAdapter,
                                       forward, init_params)
 

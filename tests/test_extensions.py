@@ -7,7 +7,6 @@ import pytest
 
 from repro.core.engine import EngineConfig, KVSwapEngine
 from repro.core.offload import KVDiskStore
-from repro.models.transformer import TransformerAdapter
 
 
 class TestInt8Store:
@@ -41,7 +40,10 @@ class TestInt8Store:
 
 class TestEngineExtensions:
     @pytest.fixture()
-    def setup(self, tiny_cfg, tiny_params, tiny_adapter, rng):
+    def setup(self, tiny_cfg, tiny_params, tiny_adapter):
+        # own Generator: the session `rng` fixture's state here depends on
+        # every earlier test, which made the int8 agreement threshold flaky
+        rng = np.random.default_rng(42)
         prompt = rng.integers(0, tiny_cfg.vocab_size, (2, 29)).astype(np.int32)
         calib = rng.standard_normal((256, tiny_cfg.n_kv_heads, tiny_cfg.head_dim))
         return tiny_cfg, tiny_params, tiny_adapter, prompt, calib

@@ -1,0 +1,477 @@
+"""Async I/O subsystem (repro.io): scheduler coalescing, prefetch worker
+lifecycle, and sync-vs-async engine bit-equality (§3.3–§3.4)."""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.engine import EngineConfig, KVSwapEngine
+from repro.core.offload import NVME, IOAccountant, KVDiskStore
+from repro.io import (DoubleBuffer, PrefetchQueueFull, PrefetchWorker,
+                      ReadScheduler)
+
+
+# ---------------------------------------------------------------------------
+# ReadScheduler
+# ---------------------------------------------------------------------------
+
+class TestReadScheduler:
+    def test_empty_plan(self):
+        assert ReadScheduler().plan([]) == []
+
+    def test_sorts_and_dedups(self):
+        plan = ReadScheduler().plan([7, 3, 3, 5])
+        assert [r.ids for r in plan] == [(3,), (5,), (7,)]
+
+    def test_adjacent_ids_coalesce_into_one_run(self):
+        (run,) = ReadScheduler().plan([2, 0, 1, 3])
+        assert (run.start, run.count, run.ids) == (0, 4, (0, 1, 2, 3))
+        assert run.waste() == 0
+
+    def test_non_adjacent_ids_split_runs(self):
+        plan = ReadScheduler().plan([0, 1, 4, 5, 9])
+        assert [(r.start, r.count) for r in plan] == [(0, 2), (4, 2), (9, 1)]
+
+    def test_gap_coalescing_reads_through_small_gaps(self):
+        plan = ReadScheduler(max_gap=1).plan([0, 2, 3, 7])
+        # gap of one group (id 1) is read through; gap of three (4-6) is not
+        assert [(r.start, r.count, r.ids) for r in plan] == [
+            (0, 4, (0, 2, 3)), (7, 1, (7,))]
+        assert plan[0].waste() == 1
+
+    def test_gap_coalescing_threshold_is_exact(self):
+        sched = ReadScheduler(max_gap=2)
+        one = sched.plan([0, 3])        # gap 2 → merged
+        two = sched.plan([0, 4])        # gap 3 → split
+        assert len(one) == 1 and len(two) == 2
+
+    def test_from_spec_gap_matches_latency_bandwidth_tradeoff(self):
+        # gap worth reading while gap·bytes/bw < request_latency
+        sched = ReadScheduler.from_spec(NVME, group_nbytes=1024)
+        assert sched.max_gap == int(NVME.request_latency * NVME.peak_bw // 1024)
+        assert sched.max_gap >= 1
+        # huge groups → never worth reading through a gap
+        assert ReadScheduler.from_spec(NVME, group_nbytes=1 << 30).max_gap == 0
+
+    def test_stats(self):
+        sched = ReadScheduler(max_gap=1)
+        st = sched.stats(sched.plan([0, 2, 3, 7]))
+        assert st == {"requests": 2, "groups_requested": 4,
+                      "groups_read": 5, "groups_wasted": 1}
+
+    def test_negative_gap_rejected(self):
+        with pytest.raises(ValueError):
+            ReadScheduler(max_gap=-1)
+
+
+# ---------------------------------------------------------------------------
+# KVDiskStore run execution
+# ---------------------------------------------------------------------------
+
+class TestReadRun:
+    def _mk(self, accountant=None):
+        return KVDiskStore(n_layers=1, batch=1, max_groups=8, group_size=4,
+                           n_kv_heads=2, head_dim=8, accountant=accountant)
+
+    def test_read_run_matches_read_groups(self, rng):
+        with self._mk() as store:
+            k = rng.standard_normal((1, 32, 2, 8)).astype(np.float32)
+            v = rng.standard_normal((1, 32, 2, 8)).astype(np.float32)
+            store.write_prefill(0, k, v)
+            kr, vr = store.read_run(0, 0, 2, 3)
+            kg, vg = store.read_groups(0, 0, [2, 3, 4])
+            np.testing.assert_array_equal(kr, kg)
+            np.testing.assert_array_equal(vr, vg)
+
+    def test_read_run_charges_one_request(self, rng):
+        acc = IOAccountant(NVME)
+        with self._mk(acc) as store:
+            k = rng.standard_normal((1, 32, 2, 8)).astype(np.float32)
+            store.write_prefill(0, k, k)
+            acc.reset()
+            store.read_run(0, 0, 1, 4)
+            assert acc.read_requests == 1
+            assert acc.read_bytes == 4 * store.group_nbytes
+
+    def test_read_run_bounds_checked(self):
+        with self._mk() as store:
+            with pytest.raises(IndexError):
+                store.read_run(0, 0, 6, 4)
+            with pytest.raises(IndexError):
+                store.read_run(0, 0, -1, 2)
+
+    def test_gap_scheduler_bills_gap_bytes(self, rng):
+        acc = IOAccountant(NVME)
+        with self._mk(acc) as store:
+            k = rng.standard_normal((1, 32, 2, 8)).astype(np.float32)
+            store.write_prefill(0, k, k)
+            acc.reset()
+            ks, _ = store.read_groups(0, 0, [0, 2], scheduler=ReadScheduler(max_gap=1))
+            assert ks.shape[0] == 2              # only requested groups returned
+            assert acc.read_requests == 1        # one sequential run
+            assert acc.read_bytes == 3 * store.group_nbytes  # gap group billed
+            np.testing.assert_array_equal(ks[1], k[0, 8:12])
+
+
+class TestAccountantTracking:
+    def test_track_scopes_capture_thread_charges(self):
+        acc = IOAccountant(NVME)
+        with acc.track() as outer:
+            acc.charge_read(4096, 1)
+            with acc.track() as inner:
+                acc.charge_read(8192, 2)
+        assert inner.read_bytes == 8192 and inner.read_requests == 2
+        assert outer.read_bytes == 4096 + 8192
+        assert acc.read_bytes == 4096 + 8192
+
+    def test_nested_zeroed_trackers_pop_correctly(self):
+        """Regression: zeroed IOTrackers compare equal; exiting the inner
+        scope must not detach the outer one (pop by position, not value)."""
+        acc = IOAccountant(NVME)
+        with acc.track() as outer:
+            with acc.track():
+                pass                      # both trackers still all-zero here
+            acc.charge_read(4096, 1)
+        assert outer.read_bytes == 4096
+
+    def test_track_is_thread_local(self):
+        acc = IOAccountant(NVME)
+        seen = {}
+
+        def other():
+            acc.charge_read(1 << 20, 4)
+            seen["done"] = True
+
+        with acc.track() as tr:
+            t = threading.Thread(target=other)
+            t.start()
+            t.join()
+        assert seen["done"]
+        assert tr.read_bytes == 0          # other thread's charge not captured
+        assert acc.read_bytes == 1 << 20   # but globally accounted
+
+
+# ---------------------------------------------------------------------------
+# PrefetchWorker / DoubleBuffer
+# ---------------------------------------------------------------------------
+
+class TestPrefetchWorker:
+    def test_submit_returns_result_with_io_attribution(self):
+        acc = IOAccountant(NVME)
+
+        def fetch(layer, n):
+            acc.charge_read(n * 4096, 1)
+            return ("table", layer, n)
+
+        with PrefetchWorker(fetch, n_threads=2, accountant=acc) as w:
+            res = w.submit(3, 7).result(timeout=5)
+            assert w.serviced == 1
+        assert res.table == ("table", 3, 7)
+        assert res.io_bytes == 7 * 4096 and res.io_requests == 1
+        assert res.io_seconds == pytest.approx(NVME.read_time(7 * 4096, 1))
+        assert res.wall_seconds >= 0
+
+    def test_same_layer_never_serviced_concurrently(self):
+        active = set()
+        lock = threading.Lock()
+        overlaps = []
+
+        def fetch(layer):
+            with lock:
+                if layer in active:
+                    overlaps.append(layer)
+                active.add(layer)
+            time.sleep(0.005)
+            with lock:
+                active.discard(layer)
+            return layer
+
+        with PrefetchWorker(fetch, n_threads=4, max_pending=64) as w:
+            futs = [w.submit(i % 2) for i in range(20)]
+            assert [f.result(timeout=10).table for f in futs] == [i % 2 for i in range(20)]
+        assert overlaps == []
+
+    def test_cross_layer_requests_run_in_parallel(self):
+        barrier = threading.Barrier(2, timeout=5)
+
+        def fetch(layer):
+            barrier.wait()   # only passes if both layers are in flight at once
+            return layer
+
+        with PrefetchWorker(fetch, n_threads=2) as w:
+            f0, f1 = w.submit(0), w.submit(1)
+            assert {f0.result(timeout=5).table, f1.result(timeout=5).table} == {0, 1}
+
+    def test_overflow_nonblocking_raises(self):
+        release = threading.Event()
+
+        def fetch(layer):
+            release.wait(5)
+            return layer
+
+        w = PrefetchWorker(fetch, n_threads=1, max_pending=2)
+        try:
+            futs = [w.submit(0), w.submit(1), w.submit(2)]  # 1 active + 2 queued
+            with pytest.raises(PrefetchQueueFull):
+                w.submit(3, block=False)
+            release.set()
+            for f in futs:
+                f.result(timeout=5)
+            w.submit(4, block=False).result(timeout=5)  # space freed
+        finally:
+            release.set()
+            w.close()
+
+    def test_blocking_submit_timeout_is_a_deadline(self):
+        """timeout bounds the TOTAL wait, not each condition wakeup."""
+        release = threading.Event()
+        started = threading.Event()
+
+        def fetch(layer):
+            started.set()
+            release.wait(5)
+            return layer
+
+        w = PrefetchWorker(fetch, n_threads=1, max_pending=1)
+        try:
+            w.submit(0)   # occupies the worker
+            assert started.wait(5)
+            w.submit(1)   # fills the queue
+            t0 = time.perf_counter()
+            with pytest.raises(PrefetchQueueFull):
+                w.submit(2, block=True, timeout=0.2)
+            assert time.perf_counter() - t0 < 2.0
+        finally:
+            release.set()
+            w.close()
+
+    def test_exception_propagates_to_future(self):
+        def fetch(layer):
+            raise ValueError(f"boom {layer}")
+
+        with PrefetchWorker(fetch, n_threads=1) as w:
+            with pytest.raises(ValueError, match="boom 5"):
+                w.submit(5).result(timeout=5)
+
+    def test_shutdown_cancels_queued_and_joins(self):
+        release = threading.Event()
+        started = threading.Event()
+
+        def fetch(layer):
+            started.set()
+            release.wait(5)
+            return layer
+
+        w = PrefetchWorker(fetch, n_threads=1, max_pending=8)
+        inflight = w.submit(0)
+        assert started.wait(5)   # request 0 is being serviced, not queued
+        queued = [w.submit(i) for i in range(1, 5)]
+        release.set()
+        w.close(wait=True)
+        assert inflight.result(timeout=5).table == 0   # in-flight completes
+        assert all(f.cancelled() for f in queued)      # queued are cancelled
+        for t in w._threads:
+            assert not t.is_alive()
+        with pytest.raises(RuntimeError):
+            w.submit(9)
+
+    def test_shutdown_overflow_stress(self):
+        """Hammer the queue from several producers while closing mid-stream:
+        no deadlock, no orphaned futures, threads exit."""
+        def fetch(layer):
+            time.sleep(0.0005)
+            return layer
+
+        w = PrefetchWorker(fetch, n_threads=3, max_pending=4)
+        futs, errs = [], []
+        flock = threading.Lock()
+
+        def producer(base):
+            for i in range(40):
+                try:
+                    f = w.submit((base + i) % 6, block=False)
+                    with flock:
+                        futs.append(f)
+                except PrefetchQueueFull:
+                    time.sleep(0.0002)
+                except RuntimeError:
+                    return   # worker shut down under us — expected
+                except BaseException as e:  # noqa: BLE001 — fail the test below
+                    errs.append(e)
+
+        threads = [threading.Thread(target=producer, args=(i,)) for i in range(4)]
+        for t in threads:
+            t.start()
+        time.sleep(0.02)
+        w.close(wait=True)
+        for t in threads:
+            t.join(timeout=5)
+        assert not errs
+        for f in futs:   # every accepted future is resolved: result or cancelled
+            assert f.cancelled() or f.result(timeout=5) is not None
+        for t in w._threads:
+            assert not t.is_alive()
+
+
+class TestDoubleBuffer:
+    def _done(self, value):
+        from concurrent.futures import Future
+        f = Future()
+        f.set_result(value)
+        return f
+
+    def test_stage_take_rotation(self):
+        buf = DoubleBuffer()
+        buf.stage(0, self._done("a"))
+        buf.stage(1, self._done("b"))
+        assert buf.take(0) == "a"
+        buf.stage(2, self._done("c"))
+        assert buf.take(1) == "b"
+        assert buf.take(2) == "c"
+        assert buf.pending() == 0
+
+    def test_depth_guard(self):
+        buf = DoubleBuffer(depth=2)
+        buf.stage(0, self._done(0))
+        buf.stage(1, self._done(1))
+        with pytest.raises(RuntimeError, match="depth"):
+            buf.stage(2, self._done(2))
+        with pytest.raises(RuntimeError, match="staged"):
+            buf.stage(1, self._done(9))
+
+    def test_drain_clears_slots(self):
+        buf = DoubleBuffer()
+        buf.stage(0, self._done("x"))
+        buf.drain()
+        assert buf.pending() == 0
+
+
+# ---------------------------------------------------------------------------
+# Engine: async pipeline ≡ sync fallback
+# ---------------------------------------------------------------------------
+
+def _run_engine(model, params, ecfg, prompt, calib, n_new=8):
+    with KVSwapEngine(model, params, ecfg, batch=2, calib_k=calib) as eng:
+        toks = eng.generate(prompt, n_new)
+        return toks, eng.reuse_ratio(), list(eng.step_log)
+
+
+class TestAsyncSyncEquivalence:
+    @pytest.fixture(scope="class")
+    def setup(self, tiny_cfg, tiny_params, tiny_adapter, rng):
+        prompt = rng.integers(0, tiny_cfg.vocab_size, (2, 37)).astype(np.int32)
+        calib = rng.standard_normal(
+            (256, tiny_cfg.n_kv_heads, tiny_cfg.head_dim)).astype(np.float32)
+        return tiny_adapter, tiny_params, prompt, calib
+
+    @pytest.mark.parametrize("predict_from", ["prev", "self"])
+    def test_tokens_bit_identical(self, setup, predict_from):
+        model, params, prompt, calib = setup
+        base = dict(group_size=4, n_select=6, rank=8, reuse_capacity=16,
+                    max_seq=128, predict_from=predict_from)
+        sync_t, sync_rr, sync_log = _run_engine(
+            model, params, EngineConfig(**base, async_io=False), prompt, calib)
+        asyn_t, asyn_rr, asyn_log = _run_engine(
+            model, params, EngineConfig(**base, async_io=True), prompt, calib)
+        np.testing.assert_array_equal(sync_t, asyn_t)
+        assert sync_rr == asyn_rr
+        # modeled accounting is mode-independent too
+        for s, a in zip(sync_log, asyn_log):
+            assert s.io_bytes == a.io_bytes
+            assert s.io_requests == a.io_requests
+            assert s.pipelined_seconds == pytest.approx(a.pipelined_seconds)
+            assert s.io_seconds == pytest.approx(a.io_seconds)
+
+    def test_async_reports_overlap_fields(self, setup):
+        model, params, prompt, calib = setup
+        ecfg = EngineConfig(group_size=4, n_select=6, rank=8, reuse_capacity=8,
+                            max_seq=128, async_io=True)
+        _, _, log = _run_engine(model, params, ecfg, prompt, calib, n_new=4)
+        for st in log:
+            assert st.wall_seconds > 0
+            assert 0 <= st.io_wait_seconds <= st.wall_seconds
+            assert st.pipelined_seconds <= st.io_seconds + st.compute_seconds + 1e-12
+            assert st.overlap_saved_seconds >= 0
+
+    def test_async_with_int8_kv(self, setup):
+        model, params, prompt, calib = setup
+        base = dict(group_size=4, n_select=6, rank=8, reuse_capacity=16,
+                    max_seq=128, kv_bits=8)
+        sync_t, _, _ = _run_engine(
+            model, params, EngineConfig(**base, async_io=False), prompt, calib, n_new=4)
+        asyn_t, _, _ = _run_engine(
+            model, params, EngineConfig(**base, async_io=True), prompt, calib, n_new=4)
+        np.testing.assert_array_equal(sync_t, asyn_t)
+
+    def test_async_hybrid_model(self, rng):
+        """State (SSM) layers interleaved with KV layers: the pipeline must
+        skip state layers and still line up prediction sources correctly."""
+        import jax
+
+        from repro.models.transformer import (ModelConfig, TransformerAdapter,
+                                              init_params)
+        cfg = ModelConfig(name="hyb", arch_type="hybrid", n_layers=3, d_model=64,
+                          n_heads=4, n_kv_heads=4, head_dim=16, d_ff=128,
+                          vocab_size=61, block_pattern=("mamba2", "shared_attn", "mamba2"),
+                          ssm_state=16)
+        params = init_params(jax.random.PRNGKey(1), cfg)
+        model = TransformerAdapter(cfg)
+        calib = rng.standard_normal((128, 4, 16)).astype(np.float32)
+        prompt = rng.integers(0, 61, (2, 21)).astype(np.int32)
+        base = dict(group_size=4, n_select=4, rank=16, reuse_capacity=8, max_seq=64)
+        sync_t, _, _ = _run_engine(
+            model, params, EngineConfig(**base, async_io=False), prompt, calib, n_new=5)
+        asyn_t, _, _ = _run_engine(
+            model, params, EngineConfig(**base, async_io=True), prompt, calib, n_new=5)
+        np.testing.assert_array_equal(sync_t, asyn_t)
+
+    def test_coalesce_gap_same_tokens_fewer_requests(self, setup):
+        """Gap coalescing trades bytes for requests without touching output."""
+        model, params, prompt, calib = setup
+        base = dict(group_size=4, n_select=6, rank=8, reuse_capacity=16,
+                    max_seq=128, async_io=True)
+        t0, _, log0 = _run_engine(
+            model, params, EngineConfig(**base, coalesce_gap=0), prompt, calib)
+        t2, _, log2 = _run_engine(
+            model, params, EngineConfig(**base, coalesce_gap=2), prompt, calib)
+        np.testing.assert_array_equal(t0, t2)
+        assert log2[-1].io_requests <= log0[-1].io_requests
+
+    def test_capacity_guard_does_not_leak_prefetches(self, setup):
+        """Exhausting KV capacity raises; the worker must shut down cleanly
+        afterwards (no staged futures left behind)."""
+        model, params, prompt, calib = setup
+        ecfg = EngineConfig(group_size=4, n_select=4, rank=8, reuse_capacity=4,
+                            max_seq=40, async_io=True)
+        with KVSwapEngine(model, params, ecfg, batch=2, calib_k=calib) as eng:
+            worker = eng.prefetcher
+            eng.prefill(prompt)
+            for _ in range(3):
+                eng.decode_step(np.zeros(2, np.int64))
+            with pytest.raises(RuntimeError):
+                eng.decode_step(np.zeros(2, np.int64))
+        assert all(not t.is_alive() for t in worker._threads)
+
+
+class TestBatchServerAsync:
+    def test_batched_outputs_identical_across_modes(self, tiny_cfg, tiny_params,
+                                                    tiny_adapter, rng):
+        from repro.serving.scheduler import BatchServer
+        calib = rng.standard_normal(
+            (256, tiny_cfg.n_kv_heads, tiny_cfg.head_dim)).astype(np.float32)
+        prompts = [rng.integers(0, tiny_cfg.vocab_size, (n,)).astype(np.int32)
+                   for n in (21, 25)]
+        results = {}
+        for mode in (False, True):
+            ecfg = EngineConfig(group_size=4, n_select=6, rank=8,
+                                reuse_capacity=16, max_seq=128, async_io=mode)
+            srv = BatchServer(tiny_adapter, tiny_params, ecfg, batch=2,
+                              calib_k=calib)
+            rids = [srv.submit(p, max_new=6) for p in prompts]
+            results[mode] = [srv.result(r) for r in rids]
+            assert srv.last_stats["async_io"] == mode
+            assert srv.last_stats["pipelined_seconds"] > 0
+        for a, b in zip(results[False], results[True]):
+            np.testing.assert_array_equal(a, b)

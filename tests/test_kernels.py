@@ -107,8 +107,8 @@ class TestGatherAttentionKernel:
 class TestKernelProperties:
     """Hypothesis sweeps: random shapes/masks vs the jnp oracles."""
 
-    from hypothesis import given, settings
-    from hypothesis import strategies as st
+    from conftest import hypothesis_or_stubs
+    given, settings, st = hypothesis_or_stubs()
 
     @settings(max_examples=15, deadline=None)
     @given(b=st.integers(1, 3), hk=st.sampled_from([1, 2, 4]),

@@ -4,7 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.lowrank import (LowRankAdapter, append_compressed, compress_k,
+from repro.core.lowrank import (append_compressed, compress_k,
                                 fit_adapter, reconstruction_error)
 
 

@@ -2,10 +2,11 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from conftest import hypothesis_or_stubs
 
-from repro.core.offload import DISKS, EMMC, NVME, IOAccountant, KVDiskStore
+from repro.core.offload import EMMC, NVME, IOAccountant, KVDiskStore
+
+given, settings, st = hypothesis_or_stubs()
 
 
 class TestDiskSpec:

@@ -1,11 +1,9 @@
 """Grouped critical-KV prediction (§3.3): Eq. 1 fidelity and recall."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-from repro.core.lowrank import LowRankAdapter, compress_k, fit_adapter
+from repro.core.lowrank import compress_k, fit_adapter
 from repro.core import predictor as P
 
 

@@ -2,7 +2,6 @@
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import registry
@@ -39,8 +38,8 @@ def test_attention_tp_specs():
 
 
 def test_sanitize_drops_indivisible():
-    mesh = jax.make_mesh((1,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh_auto
+    mesh = make_mesh_auto((1,), ("model",))
     # fake a 16-way mesh via explicit sizes check: use sanitize directly
     class FakeMesh:
         axis_names = ("data", "model")

@@ -5,7 +5,6 @@ prefill → disk → grouped prediction → reuse → decode, with quality and
 I/O properties checked end-to-end on a real (tiny) model.
 """
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -13,7 +12,6 @@ import numpy as np
 import pytest
 
 from repro.core.engine import EngineConfig, KVSwapEngine
-from repro.core.offload import EMMC, NVME
 from repro.data import SyntheticLMStream, make_needle_prompt
 from repro.models.transformer import (ModelConfig, TransformerAdapter,
                                       forward, init_params)
