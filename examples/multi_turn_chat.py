@@ -1,0 +1,84 @@
+"""Multi-turn chat over the persistent prefix cache (``src/repro/cache/``).
+
+The workload the cache is built for: every turn's prompt is the previous
+conversation plus a new user message, so turn *t* re-submits turn *t−1*'s
+entire token history.  With a session-aware :class:`BatchServer` the server
+publishes each turn's served KV blocks and the next turn restores them from
+disk — prefill cost stays proportional to the *new* tokens, not the whole
+conversation.
+
+    PYTHONPATH=src python examples/multi_turn_chat.py [--turns 4]
+
+Pass ``--cache-dir DIR`` to persist the cache across runs: the second
+invocation starts warm from turn 1.
+"""
+
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import jax
+import numpy as np
+
+from repro.cache import PrefixCache, PrefixCacheConfig
+from repro.core.engine import EngineConfig
+from repro.models.transformer import ModelConfig, TransformerAdapter, init_params
+from repro.serving.scheduler import BatchServer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--turns", type=int, default=4)
+    ap.add_argument("--system-len", type=int, default=48,
+                    help="shared system-prompt / document tokens")
+    ap.add_argument("--user-len", type=int, default=12,
+                    help="new user tokens per turn")
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--disk", choices=("nvme", "emmc"), default="nvme")
+    ap.add_argument("--cache-dir", default=None,
+                    help="persist the prefix cache here (survives the process)")
+    args = ap.parse_args()
+
+    cfg = ModelConfig(name="chat", arch_type="dense", n_layers=2, d_model=64,
+                      n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
+                      vocab_size=211)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(1)
+    calib = rng.standard_normal((128, cfg.n_kv_heads, cfg.head_dim))
+
+    max_seq = (args.system_len
+               + args.turns * (args.user_len + args.max_new) + 16)
+    ecfg = EngineConfig(group_size=4, n_select=max_seq // 4, rank=16,
+                        reuse_capacity=max_seq // 4, max_seq=max_seq,
+                        disk=args.disk, predict_from="self")
+
+    cache = PrefixCache(PrefixCacheConfig(block_tokens=8, dir=args.cache_dir))
+    srv = BatchServer(TransformerAdapter(cfg), params, ecfg, batch=1,
+                      calib_k=calib, prefix_cache=cache)
+
+    print(f"== {args.turns}-turn chat on {args.disk} "
+          f"(cache: {args.cache_dir or 'process-lifetime'}) ==")
+    history = rng.integers(0, cfg.vocab_size, args.system_len)  # system prompt
+    print("turn,prompt_tokens,cached_tokens,hit_rate,resident_blocks")
+    for turn in range(1, args.turns + 1):
+        prompt = np.concatenate(
+            [history, rng.integers(0, cfg.vocab_size, args.user_len)])
+        rid = srv.submit(prompt, max_new=args.max_new)
+        srv.flush()
+        reply = srv.result(rid)
+        # next turn's prompt starts from the full served conversation
+        history = np.concatenate([prompt, reply])
+        rep = srv.last_stats["prefill"]
+        pc = srv.last_stats["prefix_cache"]
+        print(f"{turn},{rep['prompt_tokens']},{rep['cached_tokens']},"
+              f"{pc['hit_rate']:.2f},{pc['resident_blocks']}")
+    tail_rate = srv.last_stats["prefix_cache"]["hit_rate"]
+    print(f"\nfinal-turn hit rate: {tail_rate:.1%} — prefill recomputed only "
+          f"the newest user tokens (+ the always-recomputed tail block)")
+    cache.close()
+
+
+if __name__ == "__main__":
+    main()

@@ -34,6 +34,22 @@ class ModelAdapter(Protocol):
         """
         ...
 
+    def prefill_block_with_ctx(
+        self,
+        params,
+        layer: int,
+        x: jax.Array,            # [B, S_suf, D] suffix activations
+        positions: jax.Array,    # [B, S_suf] absolute positions
+        k_prefix: jax.Array,     # [B, S_pre, H_kv, d] restored prefix K (post-RoPE)
+        v_prefix: jax.Array,     # [B, S_pre, H_kv, d]
+    ):
+        """Chunked prefill for the prefix cache: run only the suffix tokens,
+        attending over restored prefix KV plus their own.  Returns
+        ``(x_out [B, S_suf, D], k_suf, v_suf [B, S_suf, H_kv, d])`` and must
+        match :meth:`prefill_block`'s suffix rows bit-for-bit when the prefix
+        KV is bit-identical (see ``KVSwapEngine.prefill_cached``)."""
+        ...
+
     def decode_block(
         self,
         params,

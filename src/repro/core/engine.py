@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.cache.blocks import chain_blocks
 from repro.core import hardware
 from repro.core.adapter import ModelAdapter
 from repro.core.lowrank import LowRankAdapter, compress_k, fit_adapter
@@ -213,6 +214,8 @@ class KVSwapEngine:
             head_dim=model.head_dim, d_ff=getattr(model, "d_ff", 4 * model.d_model),
         )
         self.step_log: list[StepStats] = []
+        self.prefill_report: dict = {}
+        self._prompt_np: np.ndarray | None = None
 
     # ------------------------------------------------------------------
     def _fetch_table(self, j: int, ids: np.ndarray, mask: np.ndarray):
@@ -235,9 +238,54 @@ class KVSwapEngine:
         }
 
     # ------------------------------------------------------------------
+    def _modeled_prefill_compute(self, n_new: int, n_ctx0: int) -> float:
+        """Modeled compute seconds to (chunked-)prefill ``n_new`` tokens."""
+        return self.model.n_layers * hardware.prefill_layer_time(
+            self.compute_spec, self.dims, n_new=n_new, n_ctx0=n_ctx0,
+            batch=self.batch)
+
+    def _finish_prefill_report(self, *, s: int, n_cached: int, tr, wall: float) -> None:
+        """Modeled + measured prefill accounting (cold and warm paths).
+
+        ``modeled_seconds`` charges restore reads, store writes and (chunked)
+        compute sequentially — prefill is one pass, there is no layer
+        pipeline to hide behind; ``modeled_cold_seconds`` prices the same
+        prompt with zero cached tokens so callers can report the saving.
+        """
+        compute = self._modeled_prefill_compute(s - n_cached, n_cached)
+        cold_compute = self._modeled_prefill_compute(s, 0)
+        self.prefill_report = {
+            "prompt_tokens": s,
+            "cached_tokens": n_cached,
+            "computed_tokens": s - n_cached,
+            "restore_seconds": tr.read_seconds,
+            "write_seconds": tr.write_seconds,
+            "compute_seconds": compute,
+            "modeled_seconds": tr.read_seconds + tr.write_seconds + compute,
+            "modeled_cold_seconds": cold_compute + tr.write_seconds,
+            "wall_seconds": wall,
+        }
+
+    def _spill_prefill_layer(self, j: int, k_np: np.ndarray, v_np: np.ndarray,
+                             k_dev: jax.Array, s: int) -> None:
+        """Per-layer prefill spill shared by the cold and warm paths: write
+        the full groups to disk, seed the rolling tail, append to ``k_lr``.
+        One body so the two paths cannot drift (the warm path's bit-identity
+        contract depends on them matching)."""
+        g = self.cfg.group_size
+        ng = s // g
+        self.store.write_prefill(j, k_np, v_np)
+        if s - ng * g:
+            self.rolling[j].seed(k_np[:, ng * g :], v_np[:, ng * g :])
+        if ng:
+            rows = compress_k(k_dev[:, : ng * g].astype(jnp.float32), self.adapter)
+            self.k_lr[j] = _klr_append(self.k_lr[j], rows, jnp.int32(0))
+
     def prefill(self, tokens: np.ndarray) -> jax.Array:
         """Run full-attention prefill, spill KV to disk layer-by-layer, build
         the compressed K cache.  Returns last-position logits ``[B, V]``."""
+        t0 = time.perf_counter()
+        self._prompt_np = np.asarray(jax.device_get(tokens))
         tokens = jnp.asarray(tokens)
         b, s = tokens.shape
         if b != self.batch:
@@ -245,26 +293,177 @@ class KVSwapEngine:
         g = self.cfg.group_size
         positions = jnp.arange(s)[None, :].repeat(b, axis=0)
         x = self.model.embed(self.params, tokens)
-        ng = s // g
-        for layer in range(self.model.n_layers):
-            if self.layer_kinds[layer] == "state":
-                x, st = self.model.prefill_state_block(self.params, layer, x, positions)
-                self.states[layer] = st
-                continue
-            j = self._kv_index[layer]
-            x, k, v = self.model.prefill_block(self.params, layer, x, positions)
-            k_np = np.asarray(jax.device_get(k), dtype=self.cfg.np_dtype)
-            v_np = np.asarray(jax.device_get(v), dtype=self.cfg.np_dtype)
-            self.store.write_prefill(j, k_np, v_np)
-            tail = s - ng * g
-            if tail:
-                self.rolling[j].seed(k_np[:, ng * g :], v_np[:, ng * g :])
-            if ng:
-                rows = compress_k(k[:, : ng * g].astype(jnp.float32), self.adapter)
-                self.k_lr[j] = _klr_append(self.k_lr[j], rows, jnp.int32(0))
+        with self.accountant.track() as tr:
+            for layer in range(self.model.n_layers):
+                if self.layer_kinds[layer] == "state":
+                    x, st = self.model.prefill_state_block(self.params, layer, x, positions)
+                    self.states[layer] = st
+                    continue
+                j = self._kv_index[layer]
+                x, k, v = self.model.prefill_block(self.params, layer, x, positions)
+                k_np = np.asarray(jax.device_get(k), dtype=self.cfg.np_dtype)
+                v_np = np.asarray(jax.device_get(v), dtype=self.cfg.np_dtype)
+                self._spill_prefill_layer(j, k_np, v_np, k, s)
+        self.valid_tokens = (s // g) * g
+        self.seq_len = s
+        logits = self.model.logits(self.params, x[:, -1])
+        self._finish_prefill_report(s=s, n_cached=0, tr=tr,
+                                    wall=time.perf_counter() - t0)
+        return logits
+
+    # -- persistent prefix cache (src/repro/cache/) ---------------------
+    def prefill_cached(self, tokens: np.ndarray, cache) -> jax.Array:
+        """Prefill through the cross-request prefix cache.
+
+        Longest-prefix match the prompt against ``cache``
+        (:class:`repro.cache.PrefixCache`), restore the matched blocks' KV
+        groups straight into this engine's disk store, and run **only the
+        uncached suffix** through the model (chunked prefill over restored
+        prefix KV).  At least one token is always recomputed so the call
+        still returns last-position logits.
+
+        Bit-identity: the cache stores KV in the raw engine dtype, the
+        restored prefix bytes equal what a cold prefill would have written,
+        and the chunked suffix computes the same score rows as the full
+        forward — so logits (and every decode step after) are bit-identical
+        to :meth:`prefill` on the same prompt.  That contract holds for a
+        lossless disk tier and dense MLP blocks; it degrades to
+        approximately-equal when the stored KV is lossy (``kv_bits=8``
+        republishes the dequantized int8 payload; a ``dtype`` narrower than
+        the compute dtype rounds the restored K that rebuilds ``k_lr``) or
+        when MoE capacity routing drops tokens (the suffix-only pass routes
+        fewer tokens than the full forward did).
+
+        The batch prefills in lockstep, so the usable split is the *common*
+        cached prefix (minimum over rows) — the intended workload is batched
+        requests sharing a system prompt / conversation head.  Hybrid models
+        fall back to cold prefill: recurrent state lives outside the KV
+        cache.
+        """
+        t0 = time.perf_counter()
+        tokens_np = np.asarray(jax.device_get(tokens))
+        b, s = tokens_np.shape
+        if b != self.batch:
+            raise ValueError(f"batch mismatch {b} != {self.batch}")
+        # cold fallbacks: hybrid models keep recurrent state outside the KV
+        # cache, and adapters predating the chunked-prefill protocol can
+        # still publish/serve cold
+        if (any(kind != "kv" for kind in self.layer_kinds)
+                or not hasattr(self.model, "prefill_block_with_ctx")):
+            return self.prefill(tokens_np)
+        g = self.cfg.group_size
+        cache.open(n_layers=len(self.kv_layers), group_size=g,
+                   n_kv_heads=self.model.n_kv_heads,
+                   head_dim=self.model.head_dim, dtype=self.cfg.np_dtype)
+        cache.use_accountant(self.accountant)
+        chains = [cache.match(tokens_np[bi], max_tokens=s - 1) for bi in range(b)]
+        n_cached = min(sum(m.n_tokens for m in ch) for ch in chains)
+        if n_cached == 0:
+            return self.prefill(tokens_np)
+        n_blocks = n_cached // cache.cfg.block_tokens
+        chains = [ch[:n_blocks] for ch in chains]
+
+        with self.accountant.track() as tr:
+            # identical rows (shared system prompts, padded clones) resolve
+            # to the same chain — read each unique chain once
+            uniq = {ch[-1].block_id: ch for ch in chains}
+            for ch in uniq.values():
+                cache.pin(ch)
+            try:
+                data = {key: cache.read_chain(ch) for key, ch in uniq.items()}
+            finally:
+                for ch in uniq.values():
+                    cache.unpin(ch)
+            nkv, hkv, hd = len(self.kv_layers), self.model.n_kv_heads, self.model.head_dim
+            k_pre = np.empty((nkv, b, n_cached, hkv, hd), dtype=self.cfg.np_dtype)
+            v_pre = np.empty_like(k_pre)
+            for bi, ch in enumerate(chains):
+                k_pre[:, bi], v_pre[:, bi] = data[ch[-1].block_id]
+
+            positions = jnp.arange(n_cached, s)[None, :].repeat(b, axis=0)
+            x = self.model.embed(self.params, jnp.asarray(tokens_np[:, n_cached:]))
+            ng = s // g
+            for layer in range(self.model.n_layers):
+                j = self._kv_index[layer]
+                kp = jnp.asarray(k_pre[j])
+                vp = jnp.asarray(v_pre[j])
+                x, k_suf, v_suf = self.model.prefill_block_with_ctx(
+                    self.params, layer, x, positions, kp, vp)
+                k_np = np.concatenate(
+                    [k_pre[j], np.asarray(jax.device_get(k_suf), dtype=self.cfg.np_dtype)], axis=1)
+                v_np = np.concatenate(
+                    [v_pre[j], np.asarray(jax.device_get(v_suf), dtype=self.cfg.np_dtype)], axis=1)
+                self._spill_prefill_layer(
+                    j, k_np, v_np, jnp.concatenate([kp, k_suf], axis=1), s)
         self.valid_tokens = ng * g
         self.seq_len = s
-        return self.model.logits(self.params, x[:, -1])
+        self._prompt_np = tokens_np
+        logits = self.model.logits(self.params, x[:, -1])
+        self._finish_prefill_report(s=s, n_cached=n_cached, tr=tr,
+                                    wall=time.perf_counter() - t0)
+        return logits
+
+    def publish(self, cache, tokens: np.ndarray | Sequence[np.ndarray] | None = None,
+                rows: Sequence[int] | None = None) -> int:
+        """Publish this request's KV into ``cache`` (end-of-request hook).
+
+        ``tokens`` is the per-row served token history (prompt + every token
+        fed to :meth:`decode_step`); it defaults to the prefill prompt, which
+        is always safe — prompt KV was written by full-attention prefill, so
+        later warm prefills restore exactly what a cold one would compute.
+        Passing the full history additionally shares *generated* KV with
+        follow-up turns (those entries are as-decoded under sparse attention,
+        the same approximation this engine itself continues with).
+
+        Blocks are published root-first and deduplicated by content hash;
+        returns the number of newly resident blocks.
+        """
+        if any(kind != "kv" for kind in self.layer_kinds):
+            return 0
+        if tokens is None:
+            tokens = self._prompt_np
+        if tokens is None:        # nothing prefilled yet → nothing to publish
+            return 0
+        g = self.cfg.group_size
+        cache.open(n_layers=len(self.kv_layers), group_size=g,
+                   n_kv_heads=self.model.n_kv_heads,
+                   head_dim=self.model.head_dim, dtype=self.cfg.np_dtype)
+        cache.use_accountant(self.accountant)
+        bt = cache.cfg.block_tokens
+        nkv = len(self.kv_layers)
+        hkv, hd = self.model.n_kv_heads, self.model.head_dim
+        published = 0
+        bg = bt // g
+        for bi in (rows if rows is not None else range(self.batch)):
+            toks = np.asarray(tokens[bi]).reshape(-1)
+            on_disk = int(self.store.n_groups[:, bi].min()) * g
+            usable = min(len(toks), on_disk)
+            chain = chain_blocks(toks[:usable], bt)
+            # resident blocks form rooted chains, so the missing blocks are
+            # a contiguous suffix: touch the resident prefix, then read the
+            # whole missing range as ONE sequential run per layer
+            n_res = 0
+            for blk in chain:
+                if not cache.contains(blk.block_id):
+                    break
+                cache.touch(blk.block_id)
+                n_res += 1
+            missing = chain[n_res:]
+            if not missing:
+                continue
+            g0 = missing[0].index * bg
+            ngr = len(missing) * bg
+            k = np.empty((nkv, ngr, g, hkv, hd), dtype=self.cfg.np_dtype)
+            v = np.empty_like(k)
+            for j in range(nkv):
+                k[j], v[j] = self.store.read_run(j, bi, g0, ngr)
+            for blk in missing:
+                off = (blk.index * bg) - g0
+                if not cache.put_block(blk, k[:, off:off + bg], v[:, off:off + bg]):
+                    break   # budget exhausted by pinned blocks; keep the chain rooted
+                published += 1
+        cache.save()
+        return published
 
     # ------------------------------------------------------------------
     def decode_step(self, token_ids: np.ndarray) -> jax.Array:

@@ -67,6 +67,37 @@ def predictor_flops(dims: ModelDims, rank: int, n_tokens: int, batch: int) -> fl
     return batch * (qa + score)
 
 
+def prefill_layer_flops(dims: ModelDims, n_new: int, n_ctx0: int, batch: int) -> float:
+    """FLOPs to prefill ``n_new`` tokens through one block when ``n_ctx0``
+    context tokens already exist (0 = cold prefill; >0 = the chunked warm
+    path restoring a cached prefix).  Causal attention cost is the sum of a
+    context growing from ``n_ctx0 + 1`` to ``n_ctx0 + n_new``."""
+    d, h, hk, hd, ff = dims.d_model, dims.n_heads, dims.n_kv_heads, dims.head_dim, dims.d_ff
+    proj = 2 * d * (h * hd) + 2 * 2 * d * (hk * hd) + 2 * (h * hd) * d
+    ffn = 2 * 3 * d * ff
+    attn = 2 * 2 * h * hd * (n_new * n_ctx0 + n_new * (n_new + 1) // 2)
+    return batch * (n_new * (proj + ffn) + attn)
+
+
+def prefill_layer_bytes(dims: ModelDims, n_new: int, n_ctx0: int, batch: int) -> float:
+    """Bytes touched by one block's (chunked) prefill: weights stream once
+    for the whole chunk; KV and activations scale with the tokens."""
+    d, h, hk, hd, ff = dims.d_model, dims.n_heads, dims.n_kv_heads, dims.head_dim, dims.d_ff
+    w = (d * h * hd + 2 * d * hk * hd + h * hd * d + 3 * d * ff) * dims.dtype_bytes
+    kv = batch * (n_ctx0 + n_new) * 2 * hk * hd * dims.dtype_bytes
+    act = batch * n_new * d * dims.dtype_bytes * 8
+    return w + kv + act
+
+
+def prefill_layer_time(spec: ComputeSpec, dims: ModelDims, *, n_new: int,
+                       n_ctx0: int = 0, batch: int = 1) -> float:
+    """Modeled compute time for one block's (chunked) prefill."""
+    if n_new <= 0:
+        return 0.0
+    return spec.op_time(prefill_layer_flops(dims, n_new, n_ctx0, batch),
+                        prefill_layer_bytes(dims, n_new, n_ctx0, batch))
+
+
 def decode_layer_time(
     spec: ComputeSpec, dims: ModelDims, *, n_ctx: int, batch: int, rank: int = 0, n_lr_tokens: int = 0
 ) -> float:

@@ -90,7 +90,7 @@ class KVCacheManager:
             for mi in range(m):
                 if group_mask[bi, mi]:
                     gid = int(group_ids[bi, mi])
-                    slot = self.reuse._index[bi].get(gid)
+                    slot = self.reuse.slot_of(bi, gid)
                     slots[bi, mi] = -2 if slot is None else slot
         return MappingTable(
             group_ids=ids_out, slots=slots, group_mask=np.asarray(group_mask, bool),

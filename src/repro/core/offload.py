@@ -53,7 +53,10 @@ class DiskSpec:
         """Modeled wall time to service ``n_requests`` totaling ``n_bytes``."""
         if n_bytes <= 0:
             return 0.0
-        pages = 0
+        # Effective bandwidth is a function of the *per-request* size (Fig. 2):
+        # each request pays the fixed latency and is rounded up to whole NAND
+        # pages, so small requests spend most of their time on overhead and
+        # amplification while >= 256 KiB requests approach peak_bw.
         per_req = n_bytes / max(n_requests, 1)
         pages = n_requests * math.ceil(per_req / self.page_bytes)
         return n_requests * self.request_latency + pages * self.page_bytes / self.peak_bw
@@ -75,6 +78,21 @@ DISKS = {"nvme": NVME, "emmc": EMMC}
 
 # default plan: merge strictly adjacent ids only (no gap waste)
 _ADJACENT = ReadScheduler(max_gap=0)
+
+
+# -- int8 group quantization (§7 "low-bit KV"), shared by KVDiskStore and
+# -- the prefix-cache slab (repro.cache.store) -------------------------------
+def quant_groups(block: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """``block [..., G, 2, H, d]`` → (int8 block, per-group scales [...])."""
+    amax = np.abs(block).reshape(*block.shape[:-4], -1).max(axis=-1)
+    scale = np.maximum(amax / 127.0, 1e-12)
+    q = np.clip(np.rint(block / scale[..., None, None, None, None]), -127, 127)
+    return q.astype(np.int8), scale.astype(np.float32)
+
+
+def dequant_groups(q: np.ndarray, scale: np.ndarray, dtype) -> np.ndarray:
+    return (q.astype(np.float32)
+            * scale[..., None, None, None, None]).astype(dtype)
 
 
 @dataclasses.dataclass
@@ -223,14 +241,10 @@ class KVDiskStore:
     # -- int8 helpers -------------------------------------------------------
     def _quant(self, block: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
         """``block [..., G, 2, H, d]`` → (int8 block, scales [...])."""
-        amax = np.abs(block).reshape(*block.shape[:-4], -1).max(axis=-1)
-        scale = np.maximum(amax / 127.0, 1e-12)
-        q = np.clip(np.rint(block / scale[..., None, None, None, None]), -127, 127)
-        return q.astype(np.int8), scale.astype(np.float32)
+        return quant_groups(block)
 
     def _dequant(self, q: np.ndarray, scale: np.ndarray) -> np.ndarray:
-        return (q.astype(np.float32)
-                * scale[..., None, None, None, None]).astype(self.dtype)
+        return dequant_groups(q, scale, self.dtype)
 
     # -- geometry ---------------------------------------------------------
     @property

@@ -61,6 +61,14 @@ class ReuseBuffer:
         slot = self._index[batch_idx][group_id]
         return self.slots[batch_idx, slot]
 
+    def slot_of(self, batch_idx: int, group_id: int) -> int | None:
+        """Slot index holding ``group_id``, or ``None`` if not resident.
+
+        Does not count as a lookup for hit/miss stats — this is the address
+        query the mapping-table rebuild uses after residency is settled.
+        """
+        return self._index[batch_idx].get(group_id)
+
     def insert(self, batch_idx: int, group_id: int, kv_group: np.ndarray,
                protected: set | None = None) -> int | None:
         """Insert a loaded group (``[G, 2, H_kv, d]``); FIFO-evicts if full.

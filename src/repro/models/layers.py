@@ -122,6 +122,31 @@ def causal_attention(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
     return jnp.einsum("bhqk,bkhd->bqhd", w, vq)
 
 
+def chunked_causal_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                             q_start: int) -> jax.Array:
+    """Causal attention for a *suffix chunk* of queries over the full keys.
+
+    ``q [B,Sq,H,d]`` covers absolute positions ``[q_start, q_start+Sq)``;
+    ``k/v [B,Sk,Hk,d]`` cover positions ``[0, Sk)`` (cached prefix KV
+    concatenated with the chunk's own KV).  With ``q_start=0`` and
+    ``Sq == Sk`` this is exactly :func:`causal_attention` — the chunked path
+    computes the same score rows, so restoring bit-identical prefix KV makes
+    warm prefill bit-identical to cold (see ``KVSwapEngine.prefill_cached``).
+    """
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    hk = k.shape[2]
+    kq = repeat_kv(k, h // hk)
+    vq = repeat_kv(v, h // hk)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, kq) / jnp.sqrt(d).astype(q.dtype)
+    # the [Sq, Sk] slice of the causal mask, built directly (an Sk×Sk tril
+    # would be quadratic in the cached context for a tiny suffix)
+    mask = (q_start + jnp.arange(sq))[:, None] >= jnp.arange(sk)[None, :]
+    scores = jnp.where(mask[None, None], scores, jnp.finfo(scores.dtype).min)
+    w = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", w, vq)
+
+
 def bidirectional_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                             mask: jax.Array | None = None) -> jax.Array:
     """Encoder / cross attention.  q [B,Sq,H,d], k/v [B,Sk,Hk,d]."""

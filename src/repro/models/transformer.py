@@ -294,6 +294,41 @@ class TransformerAdapter:
         x, _, st = block_forward(params, self.cfg, layer, x, positions)
         return x, st
 
+    def prefill_block_with_ctx(self, params, layer, x, positions, k_prefix, v_prefix):
+        """Chunked prefill: run only the *suffix* tokens through block
+        ``layer``, attending over restored prefix KV plus their own.
+
+        ``x [B, S_suf, D]``, ``positions [B, S_suf]`` (absolute),
+        ``k_prefix/v_prefix [B, S_pre, H_kv, d]`` (post-RoPE, as cached).
+        Returns ``(x_out [B, S_suf, D], k_suf, v_suf [B, S_suf, H_kv, d])``.
+
+        Deliberately NOT jitted as a whole block: :func:`block_forward` (the
+        cold path) runs op-by-op, and whole-block XLA fusion reassociates
+        float reductions — the op-by-op chunked path computes the exact same
+        score rows, which is what makes warm prefill bit-identical to cold
+        (dense MLP blocks; MoE capacity routing sees only the suffix tokens,
+        which matches the full forward exactly when no tokens are dropped).
+        """
+        cfg = self.cfg
+        kind = cfg.blocks[layer]
+        blk = params["blocks"][layer]
+        nb, attn_p, mlp_holder = _attn_params(params, cfg, layer)
+        h = L.rmsnorm(nb["attn_norm"], x)
+        q, k, v = L.attention_qkv(attn_p, h, positions, n_heads=cfg.n_heads,
+                                  n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
+                                  rope_theta=cfg.rope_theta, qk_norm=cfg.qk_norm)
+        k_all = jnp.concatenate([k_prefix.astype(k.dtype), k], axis=1)
+        v_all = jnp.concatenate([v_prefix.astype(v.dtype), v], axis=1)
+        o = L.chunked_causal_attention(q, k_all, v_all, k_prefix.shape[1])
+        x = x + o.reshape(*x.shape[:-1], cfg.n_heads * cfg.head_dim) @ attn_p["wo"]
+        h2 = L.rmsnorm(mlp_holder["mlp_norm"], x)
+        if kind == "moe_attn":
+            y, _ = L.moe(blk["moe"], h2, top_k=cfg.moe_top_k,
+                         capacity_factor=cfg.moe_capacity_factor)
+        else:
+            y = L.swiglu(mlp_holder["mlp"], h2)
+        return _act_constrain(x + y), k, v
+
     # -- decode ------------------------------------------------------------
     @functools.partial(jax.jit, static_argnames=("self", "layer"))
     def decode_block(self, params, layer, x, positions, k_ctx, v_ctx, ctx_mask):

@@ -15,6 +15,14 @@ are issued as soon as layer *i*'s prediction scores exist, so the batch's
 disk time hides under compute.  Tokens are bit-identical either way;
 ``last_stats`` reports the modeled and measured overlap per flush.
 
+With a :class:`repro.cache.PrefixCache` attached the server is
+**session-aware**: the cache handle outlives each flush's engine, prompt
+(and generated) KV is published at end of request, and later flushes that
+share a prefix — the system prompt, the head of a multi-turn conversation —
+restore it from disk instead of recomputing it (``prefill_cached``).
+``last_stats["prefix_cache"]`` reports the hit rate and saved prefill
+tokens per flush.
+
 Greedy sampling by default; plug a ``sampler(logits) -> token_ids`` for
 temperature/top-k.
 """
@@ -26,6 +34,7 @@ from typing import Callable
 
 import numpy as np
 
+from repro.cache import PrefixCache
 from repro.core.engine import EngineConfig, KVSwapEngine
 
 
@@ -47,13 +56,18 @@ class BatchServer:
 
     def __init__(self, model_adapter, params, engine_cfg: EngineConfig, *,
                  batch: int, calib_k: np.ndarray,
-                 sampler: Callable = greedy_sampler):
+                 sampler: Callable = greedy_sampler,
+                 prefix_cache: PrefixCache | None = None):
         self.model = model_adapter
         self.params = params
         self.cfg = engine_cfg
         self.batch = batch
         self.calib_k = calib_k
         self.sampler = sampler
+        # persists across flushes (and, with PrefixCacheConfig.dir, across
+        # processes): each flush's engine restores matched prefixes from it
+        # and publishes its served tokens back at end of request
+        self.prefix_cache = prefix_cache
         self._queue: list[Request] = []
         self._next_id = 0
         self.completed: dict[int, Request] = {}
@@ -87,8 +101,12 @@ class BatchServer:
 
         with KVSwapEngine(self.model, self.params, self.cfg,
                           batch=self.batch, calib_k=self.calib_k) as eng:
-            logits = eng.prefill(prompts)
+            if self.prefix_cache is not None:
+                logits = eng.prefill_cached(prompts, self.prefix_cache)
+            else:
+                logits = eng.prefill(prompts)
             outs: list[list[int]] = [[] for _ in reqs]
+            fed: list[list[int]] = [[] for _ in reqs]   # served history past the prefill
             # feed remaining prompt tails (teacher-forced), then decode
             for step in range(max_tail + n_new):
                 if step < max_tail:
@@ -99,11 +117,40 @@ class BatchServer:
                     nxt = self.sampler(logits)
                     for i in range(self.batch):
                         outs[i].append(int(nxt[i]))
+                for i in range(self.batch):
+                    fed[i].append(int(nxt[i]))
                 logits = eng.decode_step(nxt)
+            # pad rows are clones of request 0: real_requests and the
+            # throughput figure count served requests only
+            tput_row = eng.simulated_throughput() / self.batch
             stats = {"reuse_ratio": eng.reuse_ratio(),
-                     "throughput": eng.simulated_throughput(),
+                     "throughput": real * tput_row,
+                     "batch_throughput": self.batch * tput_row,
+                     "real_requests": real,
+                     "padded_requests": self.batch - real,
                      "async_io": self.cfg.async_io,
+                     "prefill": dict(eng.prefill_report),
                      **eng.overlap_report()}
+            if self.prefix_cache is not None:
+                rep = eng.prefill_report
+                # publish each real request's full served tokens (prompt +
+                # fed history) so follow-up turns hit the whole conversation
+                history = [np.concatenate([prompts[i],
+                                           np.asarray(fed[i], np.int64)])
+                           for i in range(real)]
+                published = eng.publish(self.prefix_cache, tokens=history,
+                                        rows=range(real))
+                stats["prefix_cache"] = {
+                    "hit_rate": rep["cached_tokens"] / max(rep["prompt_tokens"], 1),
+                    "saved_prefill_tokens": real * rep["cached_tokens"],
+                    "published_blocks": published,
+                    "resident_blocks": self.prefix_cache.resident_blocks(),
+                    "resident_bytes": self.prefix_cache.resident_bytes(),
+                    "session_hit_rate": self.prefix_cache.stats.hit_rate,
+                    "modeled_prefill_speedup": (
+                        rep["modeled_cold_seconds"] / rep["modeled_seconds"]
+                        if rep["modeled_seconds"] else 1.0),
+                }
 
         for i, r in enumerate(reqs[:real]):
             r.output = np.asarray(outs[i][: r.max_new], np.int32)

@@ -1,5 +1,6 @@
 """Rolling buffer (§3.4.1) + reuse buffer (§3.4.3) invariants — including
-hypothesis property tests against a reference dict-model cache."""
+hypothesis property tests against a reference dict-model cache — and the
+mapping-table staged-overflow path in KVCacheManager (§3.4.4)."""
 
 import collections
 
@@ -7,6 +8,8 @@ import numpy as np
 import pytest
 from conftest import hypothesis_or_stubs
 
+from repro.core.manager import KVCacheManager
+from repro.core.offload import KVDiskStore
 from repro.core.reuse_buffer import ReuseBuffer
 from repro.core.rolling_buffer import RollingBuffer
 
@@ -71,6 +74,56 @@ class TestReuseBuffer:
         rb.insert(0, 3, _mk_group(3))
         assert rb.resident(0) == {2, 3}
 
+    def test_invalidate_missing_group_is_noop(self):
+        rb = ReuseBuffer(batch=1, capacity=2, group_size=4, n_kv_heads=2, head_dim=8)
+        rb.insert(0, 1, _mk_group(1))
+        rb.invalidate(0, 99)
+        assert rb.resident(0) == {1}
+
+    def test_slot_of_matches_index_without_stats(self):
+        rb = ReuseBuffer(batch=1, capacity=2, group_size=4, n_kv_heads=2, head_dim=8)
+        rb.insert(0, 7, _mk_group(7))
+        before = (rb.stats.hits, rb.stats.misses)
+        assert rb.slot_of(0, 7) == rb._index[0][7]
+        assert rb.slot_of(0, 8) is None
+        assert (rb.stats.hits, rb.stats.misses) == before
+
+    def test_protected_insert_skips_pinned_victims(self):
+        """FIFO order says evict 1, but 1 is protected → 2 goes instead."""
+        rb = ReuseBuffer(batch=1, capacity=2, group_size=4, n_kv_heads=2, head_dim=8)
+        rb.insert(0, 1, _mk_group(1))
+        rb.insert(0, 2, _mk_group(2))
+        slot = rb.insert(0, 3, _mk_group(3), protected={1, 3})
+        assert slot is not None
+        assert rb.resident(0) == {1, 3}
+
+    def test_protected_insert_returns_none_when_all_pinned(self):
+        rb = ReuseBuffer(batch=1, capacity=2, group_size=4, n_kv_heads=2, head_dim=8)
+        rb.insert(0, 1, _mk_group(1))
+        rb.insert(0, 2, _mk_group(2))
+        assert rb.insert(0, 3, _mk_group(3), protected={1, 2, 3}) is None
+        assert rb.resident(0) == {1, 2}
+        # slot_table untouched by the refused insert
+        assert set(rb.slot_table[0]) == {1, 2}
+
+    def test_refresh_in_place_does_not_evict(self):
+        rb = ReuseBuffer(batch=1, capacity=2, group_size=4, n_kv_heads=2, head_dim=8)
+        rb.insert(0, 1, _mk_group(1))
+        rb.insert(0, 2, _mk_group(2))
+        slot = rb.insert(0, 1, _mk_group(10), protected={1, 2})
+        assert slot == rb.slot_of(0, 1)
+        assert rb.resident(0) == {1, 2}
+        assert rb.get(0, 1)[0, 0, 0, 0] == 10.0
+
+    def test_invalidate_then_insert_reuses_freed_slot(self):
+        rb = ReuseBuffer(batch=1, capacity=2, group_size=4, n_kv_heads=2, head_dim=8)
+        rb.insert(0, 1, _mk_group(1))
+        rb.insert(0, 2, _mk_group(2))
+        freed = rb.slot_of(0, 1)
+        rb.invalidate(0, 1)
+        assert rb.insert(0, 3, _mk_group(3)) == freed
+        assert rb.resident(0) == {2, 3}
+
     @settings(max_examples=50, deadline=None)
     @given(ops=st.lists(st.tuples(st.sampled_from(["insert", "lookup", "invalidate"]),
                                   st.integers(0, 15)), max_size=60),
@@ -97,3 +150,74 @@ class TestReuseBuffer:
             # every resident group's contents are intact
             for g in rb.resident(0):
                 assert rb.get(0, g)[0, 0, 0, 0] == g
+
+
+class TestManagerStagedOverflow:
+    """Reuse buffer pinned full → fetch stages the overflow (slots == -2) and
+    gather serves those groups from ``MappingTable.staged`` (§3.4.4)."""
+
+    G, HK, D = 2, 1, 4
+
+    def _parts(self, *, capacity, n_groups=6):
+        store = KVDiskStore(n_layers=1, batch=1, max_groups=8, group_size=self.G,
+                            n_kv_heads=self.HK, head_dim=self.D)
+        # distinguishable group contents: token t has K = t, V = -t
+        seq = n_groups * self.G
+        toks = np.arange(seq, dtype=np.float32)
+        k = np.tile(toks[None, :, None, None], (1, 1, self.HK, self.D))
+        store.write_prefill(0, k, -k)
+        reuse = ReuseBuffer(batch=1, capacity=capacity, group_size=self.G,
+                            n_kv_heads=self.HK, head_dim=self.D)
+        rolling = RollingBuffer(batch=1, group_size=self.G, n_kv_heads=self.HK,
+                                head_dim=self.D)
+        return store, KVCacheManager(store=store, reuse=reuse, rolling=rolling,
+                                     layer=0)
+
+    def test_overflow_is_staged_and_gathered(self):
+        store, mgr = self._parts(capacity=2)
+        want = np.array([[0, 1, 2, 3]])
+        table = mgr.fetch(want, np.ones_like(want, bool))
+        staged_cols = np.flatnonzero(table.slots[0] == -2)
+        assert len(staged_cols) == 2            # 4 wanted, 2 slots
+        assert set(table.staged) == {(0, int(want[0, c])) for c in staged_cols}
+        k, v, mask, pos = mgr.gather(table)
+        assert mask[:, : 4 * self.G].all()
+        # every token of every selected group came back with its own value,
+        # whether it sat in a reuse slot or in the staged dict
+        np.testing.assert_array_equal(k[0, : 4 * self.G, 0, 0],
+                                      np.arange(8, dtype=np.float32))
+        np.testing.assert_array_equal(v[0, : 4 * self.G, 0, 0],
+                                      -np.arange(8, dtype=np.float32))
+        np.testing.assert_array_equal(pos[0, : 4 * self.G], np.arange(8))
+        store.close()
+
+    def test_staged_groups_do_not_enter_reuse_buffer(self):
+        store, mgr = self._parts(capacity=2)
+        want = np.array([[0, 1, 2, 3]])
+        table = mgr.fetch(want, np.ones_like(want, bool))
+        assert len(mgr.reuse.resident(0)) == 2
+        assert all(gid not in mgr.reuse.resident(0) for _, gid in table.staged)
+        store.close()
+
+    def test_next_fetch_can_admit_previously_staged(self):
+        """Staging is transient: once the working set shrinks, the same
+        groups load into real slots."""
+        store, mgr = self._parts(capacity=2)
+        want = np.array([[0, 1, 2, 3]])
+        mgr.fetch(want, np.ones_like(want, bool))
+        small = np.array([[2, 3]])
+        table = mgr.fetch(small, np.ones_like(small, bool))
+        assert (table.slots[0] >= 0).all()
+        assert table.staged == {}
+        assert mgr.reuse.resident(0) == {2, 3}
+        store.close()
+
+    def test_masked_columns_stay_invalid(self):
+        store, mgr = self._parts(capacity=1)
+        ids = np.array([[0, 1, 5]])
+        mask = np.array([[True, True, False]])
+        table = mgr.fetch(ids, mask)
+        assert table.slots[0, 2] == -1 and table.group_ids[0, 2] == -1
+        k, v, tok_mask, _ = mgr.gather(table)
+        assert not tok_mask[0, 2 * self.G:].any()
+        store.close()

@@ -36,6 +36,7 @@ def trained_tiny():
     return cfg, state.params
 
 
+@pytest.mark.slow
 def test_end_to_end_generation_quality_vs_full_kv(trained_tiny):
     """With a realistic (non-degenerate) budget, KVSwap generations should
     mostly agree with Full-KV on a trained model (paper Tab. 2 analogue).
@@ -99,6 +100,7 @@ def test_needle_groups_are_selected(trained_tiny, rng):
     assert hits >= 1
 
 
+@pytest.mark.slow
 def test_io_drops_with_reuse_and_emmc_slower(trained_tiny, rng):
     cfg, params = trained_tiny
     adapter = TransformerAdapter(cfg)
