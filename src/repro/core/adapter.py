@@ -65,6 +65,21 @@ class ModelAdapter(Protocol):
         v_new [B, H_kv, d])``."""
         ...
 
+    def gather_context(
+        self,
+        dev_k: jax.Array,        # [B, C, G, H_kv, d] device reuse mirror (K)
+        dev_v: jax.Array,        # [B, C, G, H_kv, d] device reuse mirror (V)
+        slots: jax.Array,        # [B, M] slot permutation (-1 invalid, -2 staged)
+        tail_k,                  # sequence of [B, H_kv, d]: device rolling tail
+        tail_v,                  # sequence of [B, H_kv, d]
+    ):
+        """OPTIONAL — device-resident context assembly.  Gather the selected
+        groups from the persistent device buffers by slot index and append
+        the rolling tail; returns the ``(k_ctx, v_ctx, ctx_mask)`` triple
+        :meth:`decode_block` takes.  Adapters without it force the engine's
+        host-gather path (``EngineConfig.device_resident`` is ignored)."""
+        ...
+
     def predict_query(self, params, layer: int, x: jax.Array, positions: jax.Array) -> jax.Array:
         """Layer ``layer``'s Q projection applied to (possibly approximate)
         input ``x [B, D]`` — includes the block's input norm, qk-norm and RoPE

@@ -16,6 +16,21 @@ Two execution modes, selected by :attr:`EngineConfig.async_io`:
   :class:`~repro.io.DoubleBuffer` holds layer *i+1*'s groups while layer *i*
   computes.  The two modes run the same per-layer numeric code on the same
   inputs, so decoded tokens are **bit-identical** — only wall-clock changes.
+
+Orthogonally, :attr:`EngineConfig.device_resident` picks where the selected
+KV working set lives between steps:
+
+* **device-resident** (default) — each layer's reuse buffer has a device
+  mirror updated by scatter-writing only newly fetched groups; the decode
+  context is gathered on device by slot permutation
+  (:meth:`~repro.models.transformer.TransformerAdapter.gather_context`),
+  fresh ``k_new/v_new`` accumulate in a device rolling buffer downloaded
+  once per completed group, and prediction is one fused dispatch.  Only
+  misses cross the host↔device boundary, so per-step upload bytes shrink by
+  the reuse hit rate (75–81 % of groups, Fig. 8).
+* **host-gather** (``device_resident=False``, the seed behavior) — every
+  layer re-materializes the full context on host and re-uploads it.  Kept as
+  the A/B control; decoded tokens are **bit-identical** between the two.
 """
 
 from __future__ import annotations
@@ -66,7 +81,13 @@ class EngineConfig:
       of InfiniGen-style online prediction, no overlap possible).
     * ``kv_bits`` — 16 stores the raw dtype on disk; 8 stores per-group
       scaled int8 (§7 "low-bit KV"), shrinking every group read.
-    * ``use_pallas`` — route gather-attention through the Pallas kernel.
+    * ``use_pallas`` — route gather-attention and the fused predictor
+      through the Pallas kernels.
+    * ``device_resident`` — keep the selected-KV working set on device
+      between steps (reuse-mirror delta uploads + device rolling buffer +
+      fused prediction); ``False`` is the host-gather control path with
+      bit-identical tokens.  Note C (``reuse_capacity``) then also bounds
+      device memory: ``2·C·G·H_kv·d·itemsize`` bytes per KV layer.
     * ``async_io`` — run group preloading on the background worker
       (:mod:`repro.io`); bit-identical tokens, overlapped wall-clock.
     * ``io_threads`` — prefetch worker threads (async mode only).
@@ -84,6 +105,7 @@ class EngineConfig:
     predict_from: str = "prev"     # "prev" (paper, overlappable) | "self"
     kv_bits: int = 16              # 16 = raw dtype on disk; 8 = int8 (§7)
     use_pallas: bool = False       # route attention through the Pallas kernel
+    device_resident: bool = True   # device-side working set, delta uploads
     dtype: str = "float32"
     compute: str = "jetson-orin-agx"  # timing model for simulated throughput
     async_io: bool = False         # background prefetch pipeline (repro.io)
@@ -116,6 +138,7 @@ class StepStats:
     io_requests: int = 0             # cumulative read requests since start
     wall_seconds: float = 0.0        # measured wall time of this step
     io_wait_seconds: float = 0.0     # measured wall time blocked on fetches
+    h2d_bytes: int = 0               # host→device KV payload bytes this step
 
     @property
     def overlap_saved_seconds(self) -> float:
@@ -153,6 +176,7 @@ class KVSwapEngine:
         if adapter.rank != cfg.rank:
             raise ValueError(f"adapter rank {adapter.rank} != cfg.rank {cfg.rank}")
         self.adapter = adapter
+        self._per_head_a = adapter.per_head  # [H_k, d, r], cached for the jit
 
         g = cfg.group_size
         self.max_groups = (cfg.max_seq + g - 1) // g
@@ -216,6 +240,17 @@ class KVSwapEngine:
         self.step_log: list[StepStats] = []
         self.prefill_report: dict = {}
         self._prompt_np: np.ndarray | None = None
+        # device-resident decode state (built lazily at the first decode step
+        # so prefill seeds the host buffers first); adapters without
+        # gather_context fall back to the host-gather path
+        self.device_resident = bool(cfg.device_resident
+                                    and hasattr(model, "gather_context"))
+        # device rolling tail: per layer, the last fill tokens' k/v as the
+        # decode_block outputs (still on device, never round-tripped)
+        self._tail_k: list[list[jax.Array]] = [[] for _ in range(n_kv_layers)]
+        self._tail_v: list[list[jax.Array]] = [[] for _ in range(n_kv_layers)]
+        self._dev_ready = False
+        self._h2d_step = 0
 
     # ------------------------------------------------------------------
     def _fetch_table(self, j: int, ids: np.ndarray, mask: np.ndarray):
@@ -225,17 +260,26 @@ class KVSwapEngine:
     # ------------------------------------------------------------------
     def metadata_bytes(self) -> dict:
         """In-memory footprint of KVSwap state (the paper's Fig. 3a metric)."""
+        # logical = bytes holding *valid* compressed keys, summed over the
+        # layers that own a k_lr — KV layers only (hybrid models' state
+        # layers have none), not model.n_layers
         klr = self.batch * self.valid_tokens * self.cfg.rank * 4
         klr_alloc = sum(int(np.prod(k.shape)) * 4 for k in self.k_lr)
         reuse = sum(r.nbytes for r in self.reuse)
         rolling = sum(r.nbytes for r in self.rolling)
-        return {
-            "k_lr_logical": klr * self.model.n_layers // max(self.model.n_layers, 1),
+        out = {
+            "k_lr_logical": klr * len(self.kv_layers),
             "k_lr_alloc": klr_alloc,
             "reuse_buffer": reuse,
             "rolling_buffer": rolling,
             "total": klr_alloc + reuse + rolling,
         }
+        if any(r.device is not None for r in self.reuse):
+            # the device mirrors double C's footprint (host copy + device
+            # mirror); reported separately — it bounds *device* memory
+            out["device_mirror"] = sum(
+                r.device.nbytes for r in self.reuse if r.device is not None)
+        return out
 
     # ------------------------------------------------------------------
     def _modeled_prefill_compute(self, n_new: int, n_ctx0: int) -> float:
@@ -285,6 +329,7 @@ class KVSwapEngine:
         """Run full-attention prefill, spill KV to disk layer-by-layer, build
         the compressed K cache.  Returns last-position logits ``[B, V]``."""
         t0 = time.perf_counter()
+        self._reset_device_state()   # mirrors rebuilt at first decode
         self._prompt_np = np.asarray(jax.device_get(tokens))
         tokens = jnp.asarray(tokens)
         b, s = tokens.shape
@@ -362,6 +407,7 @@ class KVSwapEngine:
             return self.prefill(tokens_np)
         n_blocks = n_cached // cache.cfg.block_tokens
         chains = [ch[:n_blocks] for ch in chains]
+        self._reset_device_state()   # mirrors rebuilt at first decode
 
         with self.accountant.track() as tr:
             # identical rows (shared system prompts, padded clones) resolve
@@ -476,6 +522,9 @@ class KVSwapEngine:
         if self.seq_len + 1 > self.cap_tokens:
             raise RuntimeError("KV capacity exceeded; raise cfg.max_seq")
         t0 = time.perf_counter()
+        if self.device_resident:
+            self._ensure_device_state()
+        self._h2d_step = 0
         b = self.batch
         tok = jnp.asarray(token_ids).reshape(b, 1)
         pos = jnp.full((b,), self.seq_len, dtype=jnp.int32)
@@ -504,17 +553,51 @@ class KVSwapEngine:
         stats.io_bytes = snap["read_bytes"]
         stats.io_requests = snap["read_requests"]
         stats.io_wait_seconds = io_wait
+        stats.h2d_bytes = self._h2d_step
         stats.wall_seconds = time.perf_counter() - t0
         self.step_log.append(stats)
         return self.model.logits(self.params, x)
 
+    def _reset_device_state(self) -> None:
+        """Drop the device mirrors and tails (called on re-prefill) so stale
+        device memory is released — and not silently resident while
+        unreported — during the prefill peak; the first decode step after
+        rebuilds them from the fresh host state."""
+        self._dev_ready = False
+        for j in range(len(self.kv_layers)):
+            self.reuse[j].device = None
+            self._tail_k[j] = []
+            self._tail_v[j] = []
+
+    def _ensure_device_state(self) -> None:
+        """Build the per-layer device mirrors at the first decode step: the
+        reuse buffer's slot storage (usually empty) and the rolling tail the
+        prefill seeded.  One upload per request; every later step ships only
+        fetch misses."""
+        if self._dev_ready:
+            return
+        for j in range(len(self.kv_layers)):
+            mirror = self.reuse[j].attach_device_mirror()
+            if j == 0:   # jit cache is shared across layers (same shapes)
+                mirror.prewarm(self.batch * self.cfg.n_select)
+            fill = self.rolling[j].fill
+            self._tail_k[j] = [jnp.asarray(self.rolling[j].k[:, t])
+                               for t in range(fill)]
+            self._tail_v[j] = [jnp.asarray(self.rolling[j].v[:, t])
+                               for t in range(fill)]
+        self._dev_ready = True
+
     # -- per-layer pieces shared by both modes --------------------------
     def _predict_for(self, layer: int, j: int, pred_src: jax.Array, pos: jax.Array,
                      valid: jax.Array) -> tuple[np.ndarray, np.ndarray]:
-        """Score + select layer ``layer``'s critical groups from ``pred_src``."""
+        """Score + select layer ``layer``'s critical groups from ``pred_src``.
+
+        The prediction itself is one fused dispatch (:meth:`_predict`); the
+        device ``(ids, mask)`` pair is pulled to host in a single transfer
+        here, just before the fetch needs it."""
         q_pred = self.model.predict_query(self.params, layer, pred_src, pos)
-        ids, mask = self._predict(j, q_pred, valid)
-        return np.asarray(ids), np.asarray(mask)
+        ids, mask = jax.device_get(self._predict(j, q_pred, valid))
+        return ids, mask
 
     def _state_layer(self, layer: int, x: jax.Array, pos: jax.Array,
                      t_compute: list[float]) -> jax.Array:
@@ -529,8 +612,18 @@ class KVSwapEngine:
 
     def _kv_layer(self, layer: int, j: int, x: jax.Array, pos: jax.Array, table,
                   t_compute: list[float], flush_rows: list) -> jax.Array:
+        if self.device_resident:
+            return self._kv_layer_device(layer, j, x, pos, table, t_compute,
+                                         flush_rows)
+        return self._kv_layer_host(layer, j, x, pos, table, t_compute,
+                                   flush_rows)
+
+    def _kv_layer_host(self, layer: int, j: int, x: jax.Array, pos: jax.Array,
+                       table, t_compute: list[float], flush_rows: list) -> jax.Array:
+        """Seed behavior (the A/B control): host concat + full upload."""
         cfg = self.cfg
         k_ctx, v_ctx, tok_mask, _ = self.managers[j].gather(table)
+        self._h2d_step += k_ctx.nbytes + v_ctx.nbytes
         x, k_new, v_new = self.model.decode_block(
             self.params, layer, x, pos,
             jnp.asarray(k_ctx), jnp.asarray(v_ctx), jnp.asarray(tok_mask),
@@ -542,15 +635,81 @@ class KVSwapEngine:
         if flushed is not None:
             # compress the completed group's keys exactly as stored on disk
             k_g = jnp.asarray(flushed[0], dtype=jnp.float32)
+            self._h2d_step += k_g.nbytes
             flush_rows.append((j, compress_k(k_g, self.adapter)))
-        n_ctx = k_ctx.shape[1] + 1
+        self._charge_layer_compute(j, k_ctx.shape[1] + 1, t_compute)
+        return x
+
+    def _kv_layer_device(self, layer: int, j: int, x: jax.Array, pos: jax.Array,
+                         table, t_compute: list[float], flush_rows: list) -> jax.Array:
+        """Device-resident hot path: only fetch misses cross host→device.
+
+        The reuse mirror is brought up to date with one scatter of the
+        fetch's ``new_groups`` delta, the context is gathered on device by
+        the step's slot permutation, and the freshly decoded ``k_new/v_new``
+        stay on device in a rolling mirror until the group completes (one
+        download per ``G`` steps feeds the disk spill + ``k_lr`` append).
+        Feeds the *same* compiled ``decode_block`` as the host path with
+        bit-identical inputs, so tokens match the control exactly.
+        """
+        cfg = self.cfg
+        g = cfg.group_size
+        mgr = self.managers[j]
+        self._h2d_step += mgr.sync_device(table)
+        mirror = self.reuse[j].device
+        k_ctx, v_ctx, tok_mask = self.model.gather_context(
+            mirror.k, mirror.v, jnp.asarray(table.slots),
+            self._tail_k[j], self._tail_v[j])
+        # overflow groups that couldn't enter the pinned-full reuse buffer
+        # (slots == -2) are staged on host: upload transiently and overwrite
+        # their gathered rows (rare — C smaller than the step's working set).
+        # All staged rows go in ONE batched update so the context is copied
+        # once, not once per staged group.
+        if table.staged:
+            rows_b: list[int] = []
+            rows_t: list[int] = []
+            pay_k: list[np.ndarray] = []
+            pay_v: list[np.ndarray] = []
+            for (bi, gid), kv in table.staged.items():
+                self._h2d_step += kv.nbytes
+                for mi in np.nonzero((table.group_ids[bi] == gid)
+                                     & (table.slots[bi] == -2))[0]:
+                    rows_b.extend([bi] * g)
+                    rows_t.extend(range(int(mi) * g, (int(mi) + 1) * g))
+                    pay_k.append(kv[:, 0])
+                    pay_v.append(kv[:, 1])
+            if rows_b:
+                bb = jnp.asarray(np.asarray(rows_b))
+                tt = jnp.asarray(np.asarray(rows_t))
+                k_ctx = k_ctx.at[bb, tt].set(jnp.asarray(np.concatenate(pay_k)))
+                v_ctx = v_ctx.at[bb, tt].set(jnp.asarray(np.concatenate(pay_v)))
+        x, k_new, v_new = self.model.decode_block(
+            self.params, layer, x, pos, k_ctx, v_ctx, tok_mask)
+        self._tail_k[j].append(k_new)
+        self._tail_v[j].append(v_new)
+        if mgr.rolling.advance():
+            # group complete: stack the device tail once (cast exactly as
+            # the host path stores it); one download feeds the disk spill,
+            # the k_lr append compresses straight from the device copy
+            grp_k = jnp.stack(self._tail_k[j], axis=1).astype(cfg.np_dtype)
+            grp_v = jnp.stack(self._tail_v[j], axis=1).astype(cfg.np_dtype)
+            self._tail_k[j] = []
+            self._tail_v[j] = []
+            k_np, v_np = (np.asarray(a) for a in jax.device_get((grp_k, grp_v)))
+            mgr.spill_group(k_np, v_np)
+            flush_rows.append(
+                (j, compress_k(grp_k.astype(jnp.float32), self.adapter)))
+        self._charge_layer_compute(j, k_ctx.shape[1] + 1, t_compute)
+        return x
+
+    def _charge_layer_compute(self, j: int, n_ctx: int,
+                              t_compute: list[float]) -> None:
         t_compute.append(
             hardware.decode_layer_time(
                 self.compute_spec, self.dims, n_ctx=n_ctx, batch=self.batch,
-                rank=cfg.rank, n_lr_tokens=self.valid_tokens,
+                rank=self.cfg.rank, n_lr_tokens=self.valid_tokens,
             )
         )
-        return x
 
     # -- synchronous path ------------------------------------------------
     def _layers_sync(self, x, pos, valid, t_compute, t_io, flush_rows):
@@ -618,16 +777,27 @@ class KVSwapEngine:
     def _predict(self, layer: int, q_pred: jax.Array, valid: jax.Array):
         """Grouped critical-KV prediction against the compressed K cache.
 
-        ``predict_groups`` expects raw ``x``/``W_q``; the engine already has
-        the fully-normed query from the adapter, so it calls the lower-level
-        pieces directly.
+        One fused dispatch (``lowrank_queries → token_scores → group_scores
+        → select_groups`` under a single jit; Pallas scoring kernel when
+        ``use_pallas``), returning device ``(ids, mask)``.  Both engine
+        paths (``device_resident`` on/off) share this implementation, which
+        is part of what keeps their decoded tokens bit-identical.
         """
-        from repro.core import predictor as P
+        q32 = q_pred.astype(jnp.float32)
+        if self.cfg.use_pallas:
+            from repro.kernels import fused_predict_pallas
+            from repro.models import layers as _L
 
-        q_lr = P.lowrank_queries(q_pred.astype(jnp.float32), self.adapter, self.model.n_heads)
-        scores = P.token_scores(q_lr, self.k_lr[layer])
-        gs = P.group_scores(scores, self.cfg.group_size, valid)
-        return P.select_groups(gs, self.cfg.n_select)
+            return fused_predict_pallas(
+                q32, self._per_head_a, self.k_lr[layer],
+                jnp.full((q32.shape[0],), valid, jnp.int32),
+                group_size=self.cfg.group_size, n_select=self.cfg.n_select,
+                interpret=_L.PALLAS_INTERPRET)
+        from repro.core.predictor import fused_predict
+
+        return fused_predict(
+            q32, self._per_head_a, self.k_lr[layer], valid,
+            group_size=self.cfg.group_size, n_select=self.cfg.n_select)
 
     @staticmethod
     def _pipeline_latency(t_compute: Sequence[float], t_io: Sequence[float]) -> float:
@@ -642,16 +812,30 @@ class KVSwapEngine:
 
     # ------------------------------------------------------------------
     def generate(self, prompt: np.ndarray, n_new: int, *, greedy: bool = True, rng: np.random.Generator | None = None) -> np.ndarray:
-        """Prefill + ``n_new`` decode steps.  Returns ``[B, n_new]`` tokens."""
+        """Prefill + ``n_new`` decode steps.  Returns ``[B, n_new]`` tokens.
+
+        Sampling is jitted and the drawn ids stay on device between steps:
+        greedy is one ``argmax`` dispatch, non-greedy a single vectorized
+        ``jax.random.categorical`` draw over the whole batch
+        (:func:`repro.serving.sampling.make_sampler` — no per-row host
+        softmax loop).  ``rng`` only seeds the JAX key, keeping the old
+        signature; the generated ``[B, n_new]`` block is pulled to host once
+        at the end.
+        """
+        from repro.serving import sampling as _sampling
+
         logits = self.prefill(prompt)
+        if greedy:
+            sample = _sampling.greedy_device
+        else:
+            seed = 0 if rng is None else int(rng.integers(0, 2**31 - 1))
+            sample = _sampling.make_sampler(seed=seed, device=True)
         out = []
         for _ in range(n_new):
-            nxt = np.asarray(jnp.argmax(logits, axis=-1)) if greedy else np.array(
-                [rng.choice(logits.shape[-1], p=np.asarray(jax.nn.softmax(l))) for l in logits]
-            )
+            nxt = sample(logits)
             out.append(nxt)
             logits = self.decode_step(nxt)
-        return np.stack(out, axis=1)
+        return np.asarray(jnp.stack(out, axis=1))
 
     def reuse_ratio(self) -> float:
         hits = sum(r.stats.hits for r in self.reuse)
@@ -680,6 +864,7 @@ class KVSwapEngine:
             "overlap_saved_seconds": mean(lambda s: s.overlap_saved_seconds),
             "wall_seconds": mean(lambda s: s.wall_seconds),
             "io_wait_seconds": mean(lambda s: s.io_wait_seconds),
+            "h2d_bytes": mean(lambda s: s.h2d_bytes),
         }
 
     def close(self):

@@ -41,6 +41,9 @@ class MappingTable:
     rolling_fill: int
     # transient staging for groups that couldn't enter the reuse buffer
     staged: dict = dataclasses.field(default_factory=dict)  # (bi, gid) -> [G,2,Hkv,d]
+    # groups this fetch loaded from disk into reuse slots — the *delta* the
+    # device-resident path scatter-uploads (reuse hits ship zero bytes)
+    new_groups: list = dataclasses.field(default_factory=list)  # (bi, slot, kv)
 
 
 class KVCacheManager:
@@ -73,6 +76,7 @@ class KVCacheManager:
         slots = np.full((b, m), -1, dtype=np.int64)
         ids_out = np.where(group_mask, group_ids, -1)
         staged: dict = {}
+        new_groups: list = []
         for bi in range(b):
             want = [int(g) for g, ok in zip(group_ids[bi], group_mask[bi]) if ok]
             # de-dup, preserving order (top-k can repeat id 0 on masked rows)
@@ -85,8 +89,11 @@ class KVCacheManager:
                     off = gid - run.start
                     kv = np.stack([k_r[off], v_r[off]], axis=1)  # [G, 2, Hkv, d]
                     # current working set is pinned; overflow stays staged
-                    if self.reuse.insert(bi, gid, kv, protected=want_set) is None:
+                    slot = self.reuse.insert(bi, gid, kv, protected=want_set)
+                    if slot is None:
                         staged[(bi, gid)] = kv
+                    else:
+                        new_groups.append((bi, slot, kv))
             for mi in range(m):
                 if group_mask[bi, mi]:
                     gid = int(group_ids[bi, mi])
@@ -94,7 +101,7 @@ class KVCacheManager:
                     slots[bi, mi] = -2 if slot is None else slot
         return MappingTable(
             group_ids=ids_out, slots=slots, group_mask=np.asarray(group_mask, bool),
-            rolling_fill=self.rolling.fill, staged=staged,
+            rolling_fill=self.rolling.fill, staged=staged, new_groups=new_groups,
         )
 
     def gather(self, table: MappingTable) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
@@ -136,6 +143,30 @@ class KVCacheManager:
             base = self.store.n_groups[self.layer][:, None] * g
             pos[:, m * g :] = base + np.arange(fill)[None, :]
         return k, v, mask, pos
+
+    def sync_device(self, table: MappingTable) -> int:
+        """Scatter a fetch's newly loaded groups into the device mirror.
+
+        The delta-upload contract of the device-resident decode path: a step
+        whose working set fully hits the reuse buffer has an empty
+        ``table.new_groups`` and uploads **zero** group bytes.  Must run on
+        the thread that owns the JAX device (the engine's main thread) — the
+        async fetch itself stays host-only.  Returns bytes uploaded.
+        """
+        mirror = self.reuse.device
+        if mirror is None:
+            raise RuntimeError("no device mirror attached (host-gather mode?)")
+        return mirror.scatter(table.new_groups)
+
+    def spill_group(self, k_group: np.ndarray, v_group: np.ndarray) -> None:
+        """Write one completed group per row to disk (device-resident flush).
+
+        Counterpart of :meth:`append_token` for the device path: the rolling
+        tokens lived on device, were counted by ``RollingBuffer.advance()``,
+        and are downloaded once per ``G`` steps as this ``[B, G, H_kv, d]``
+        pair.
+        """
+        self.store.append_group(self.layer, k_group, v_group)
 
     def append_token(self, k_new: np.ndarray, v_new: np.ndarray):
         """Route one new token's KV: rolling buffer, flushing full groups to

@@ -43,17 +43,30 @@ class PredictorConfig:
         return self.n_heads // self.n_kv_heads
 
 
+def lowrank_queries_per_head(
+    q: jax.Array,                 # [B, H, d]
+    per_head_a: jax.Array,        # [H_k, d, r]
+) -> jax.Array:
+    """``Q_h A_{q(h)}`` for every query head → ``[B, H, r]``.
+
+    The single home of the GQA head mapping ``q(h) = h // heads_per_kv``
+    (query head → shared K-head adapter slice) — the fused predictors and
+    the op-by-op pipeline all route through here so the convention cannot
+    drift between them (the bit-identity contract depends on it).
+    """
+    heads_per_kv = q.shape[1] // per_head_a.shape[0]
+    a_for_head = jnp.repeat(per_head_a.astype(q.dtype), heads_per_kv, axis=0)
+    return jnp.einsum("bhd,hdr->bhr", q, a_for_head)
+
+
 def lowrank_queries(
     q: jax.Array,                 # [B, H, d]
     adapter: LowRankAdapter,
     n_heads: int,
 ) -> jax.Array:
     """``Q_h A_{q(h)}`` for every query head → ``[B, H, r]``."""
-    per_head_a = adapter.per_head.astype(q.dtype)      # [H_k, d, r]
-    heads_per_kv = n_heads // adapter.n_kv_heads
-    # q(h) = h // heads_per_kv  (GQA head → shared K head)
-    a_for_head = jnp.repeat(per_head_a, heads_per_kv, axis=0)  # [H, d, r]
-    return jnp.einsum("bhd,hdr->bhr", q, a_for_head)
+    del n_heads  # implied by q.shape[1]
+    return lowrank_queries_per_head(q, adapter.per_head)
 
 
 def token_scores(
@@ -94,6 +107,31 @@ def select_groups(gscores: jax.Array, n_select: int) -> tuple[jax.Array, jax.Arr
     top_scores, ids = jax.lax.top_k(gscores, m)
     mask = top_scores > NEG_INF / 2
     return jnp.where(mask, ids, 0), mask
+
+
+@functools.partial(jax.jit, static_argnames=("group_size", "n_select"))
+def fused_predict(
+    q: jax.Array,                 # [B, H, d] — fully-normed, RoPE'd query
+    per_head_a: jax.Array,        # [H_k, d, r] — adapter.per_head
+    k_lr: jax.Array,              # [B, N, r] (N a multiple of G)
+    valid_len: jax.Array,         # scalar or [B] valid token count
+    *,
+    group_size: int,
+    n_select: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Single-dispatch decode-time prediction: Eq. 1 scoring → group
+    reduce-max → top-M, fused into one jitted call.
+
+    The engine's per-layer hot path previously ran
+    ``lowrank_queries → token_scores → group_scores → select_groups`` as four
+    separate dispatches; this is the same op sequence under one jit, so the
+    result is returned as device ``(ids, mask)`` that the caller pulls to
+    host **once**, just before the fetch.  A Pallas variant lives in
+    :mod:`repro.kernels.fused_predict` (gated by ``EngineConfig.use_pallas``).
+    """
+    q_lr = lowrank_queries_per_head(q, per_head_a)
+    gs = group_scores(token_scores(q_lr, k_lr), group_size, valid_len)
+    return select_groups(gs, n_select)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))

@@ -12,6 +12,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import functools
 
 import numpy as np
 
@@ -25,6 +26,131 @@ class ReuseStats:
     def ratio(self) -> float:
         tot = self.hits + self.misses
         return self.hits / tot if tot else 0.0
+
+
+def _pad_bucket(n: int) -> int:
+    """Pad scatter batches to power-of-two sizes with a floor of 8, so the
+    full set of shape variants is tiny ({8, 16, 32, ...}) and can be
+    pre-compiled up front (:meth:`DeviceReuseMirror.prewarm`) — an XLA
+    compile for a fresh miss-count shape mid-decode would cost more than
+    hundreds of steady-state steps."""
+    nb = 8
+    while nb < n:
+        nb *= 2
+    return nb
+
+
+@functools.lru_cache(maxsize=None)
+def _scatter_fn():
+    """Jitted donated scatter of newly fetched groups into the device mirror.
+
+    Lazy so importing this module never initializes a JAX backend (host-only
+    users: prefetch worker threads, tuner).  Padding rows carry ``slot ==
+    capacity`` which ``mode="drop"`` discards.
+    """
+    import jax
+
+    @functools.partial(jax.jit, donate_argnums=(0, 1))
+    def scatter(dev_k, dev_v, idx, kv):
+        # idx [2, n] = (batch_idx, slot); kv [n, G, 2, H_kv, d] packed as the
+        # disk layout, one upload per fetch
+        dev_k = dev_k.at[idx[0], idx[1]].set(kv[:, :, 0], mode="drop")
+        dev_v = dev_v.at[idx[0], idx[1]].set(kv[:, :, 1], mode="drop")
+        return dev_k, dev_v
+
+    return scatter
+
+
+class DeviceReuseMirror:
+    """Device-side mirror of a :class:`ReuseBuffer`'s slot storage.
+
+    Holds ``k/v: [B, C, G, H_kv, d]`` device arrays addressed by the *same*
+    slot indices the host slot table assigns, so a :class:`MappingTable`'s
+    ``slots`` array is directly a gather index into device memory.  Only
+    newly fetched groups cross the host→device boundary (one padded scatter
+    per fetch, donated buffers); reuse hits move zero bytes.
+
+    ``uploaded_bytes`` counts the *payload* bytes shipped host→device (the
+    groups the delta actually contains) — the transfer-counting hook the
+    tests and the ``decode_hotpath`` benchmark assert against.
+    ``padded_bytes`` additionally includes the zero rows the pow-2 bucket
+    padding ships (a batching artifact: it buys a tiny, pre-compilable set
+    of scatter shapes; the padding never exceeds one bucket of slack).
+    """
+
+    def __init__(self, slots: np.ndarray, slot_table: np.ndarray | None = None):
+        import jax.numpy as jnp
+
+        # slots: host [B, C, G, 2, H_kv, d] → split K/V device mirrors.
+        # At attach time the reuse buffer is normally empty (first decode
+        # step after prefill): allocate zeros on device instead of shipping
+        # 2·B·C·G·H_kv·d bytes of host zeros across the boundary.
+        shape = slots.shape[:3] + slots.shape[4:]
+        if slot_table is not None and (slot_table == -1).all():
+            self.k = jnp.zeros(shape, slots.dtype)
+            self.v = jnp.zeros(shape, slots.dtype)
+        else:
+            self.k = jnp.asarray(np.ascontiguousarray(slots[:, :, :, 0]))
+            self.v = jnp.asarray(np.ascontiguousarray(slots[:, :, :, 1]))
+        self.capacity = slots.shape[1]
+        self._dtype = slots.dtype
+        self.uploaded_bytes = 0    # payload bytes (actual delta groups)
+        self.padded_bytes = 0      # payload + pow-2 bucket padding
+        self.uploaded_groups = 0
+        self.scatter_calls = 0
+
+    @property
+    def nbytes(self) -> int:
+        return int(np.prod(self.k.shape)) * self._dtype.itemsize * 2
+
+    def prewarm(self, max_entries: int) -> None:
+        """Compile every scatter bucket size up front (all-dropped writes).
+
+        ``max_entries`` is the most groups one fetch can insert (B·M); the
+        bucket set is {8, 16, ..., pad(max_entries)}.  Costs a few hundred
+        ms once per process per shape — off the measured decode path.
+        """
+        import jax.numpy as jnp
+
+        g, hk, d = self.k.shape[2:]
+        sizes, nb = [], 8
+        while nb < max(max_entries, 1):
+            sizes.append(nb)
+            nb *= 2
+        sizes.append(nb)
+        zeros = np.zeros((nb, g, 2, hk, d), self._dtype)
+        for n in sizes:
+            idx = np.full((2, n), self.capacity, np.int32)  # all rows dropped
+            idx[0] = 0
+            self.k, self.v = _scatter_fn()(
+                self.k, self.v, jnp.asarray(idx), jnp.asarray(zeros[:n]))
+
+    def scatter(self, entries: list) -> int:
+        """Write ``entries = [(batch_idx, slot, kv [G, 2, H_kv, d]), ...]``
+        into the mirror in one jitted scatter.  Returns payload bytes
+        uploaded (what the delta contains; bucket padding is tracked
+        separately in ``padded_bytes``)."""
+        if not entries:
+            return 0
+        import jax.numpy as jnp
+
+        n = len(entries)
+        nb = _pad_bucket(n)
+        g, _, hk, d = entries[0][2].shape
+        idx = np.full((2, nb), self.capacity, np.int32)   # pad rows → dropped
+        idx[0] = 0
+        kv_up = np.zeros((nb, g, 2, hk, d), self._dtype)
+        for i, (bi, slot, kv) in enumerate(entries):
+            idx[0, i], idx[1, i] = bi, slot
+            kv_up[i] = kv
+        self.k, self.v = _scatter_fn()(
+            self.k, self.v, jnp.asarray(idx), jnp.asarray(kv_up))
+        nbytes = n * int(entries[0][2].nbytes)
+        self.uploaded_bytes += nbytes
+        self.padded_bytes += kv_up.nbytes
+        self.uploaded_groups += n
+        self.scatter_calls += 1
+        return nbytes
 
 
 class ReuseBuffer:
@@ -42,6 +168,17 @@ class ReuseBuffer:
         self._index: list[dict[int, int]] = [dict() for _ in range(batch)]  # gid -> slot
         self._free: list[list[int]] = [list(range(capacity - 1, -1, -1)) for _ in range(batch)]
         self.stats = ReuseStats()
+        # device-side mirror (attached by the engine's device-resident path)
+        self.device: DeviceReuseMirror | None = None
+
+    def attach_device_mirror(self) -> DeviceReuseMirror:
+        """(Re)build the device mirror from the current host slot contents.
+
+        Called once per request at the first decode step; thereafter the
+        mirror is kept coherent by delta scatters of fetch misses only
+        (:meth:`KVCacheManager.sync_device`)."""
+        self.device = DeviceReuseMirror(self.slots, self.slot_table)
+        return self.device
 
     @property
     def nbytes(self) -> int:

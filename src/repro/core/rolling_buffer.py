@@ -42,6 +42,23 @@ class RollingBuffer:
             return full_k, full_v
         return None
 
+    def advance(self) -> bool:
+        """Count one appended token without materializing its host copy.
+
+        The device-resident decode path keeps ``k_new/v_new`` on device (a
+        device rolling mirror in the engine) and only downloads the completed
+        group at flush time; this keeps ``fill`` — which the mapping-table
+        rebuild reads — in sync without a per-token device→host transfer.
+        Returns ``True`` when the group completes (caller must then spill the
+        device group via :meth:`KVCacheManager.spill_group`); the host ``k/v``
+        arrays are NOT updated and are invalid until the next :meth:`seed`.
+        """
+        self.fill += 1
+        if self.fill == self.group_size:
+            self.fill = 0
+            return True
+        return False
+
     def seed(self, k_tail: np.ndarray, v_tail: np.ndarray) -> None:
         """Seed with the prefill tail (``seq % G`` tokens): ``[B, t, H_kv, d]``."""
         t = k_tail.shape[1]

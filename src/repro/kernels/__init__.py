@@ -1,3 +1,4 @@
+from repro.kernels.fused_predict import fused_predict_pallas
 from repro.kernels.ops import gather_attention, lowrank_group_scores
 
-__all__ = ["lowrank_group_scores", "gather_attention"]
+__all__ = ["lowrank_group_scores", "gather_attention", "fused_predict_pallas"]

@@ -7,6 +7,8 @@ partition rules over param path names (repro.sharding).
 
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -196,6 +198,50 @@ def decode_attention(q: jax.Array, k_ctx: jax.Array, v_ctx: jax.Array,
     scores = jnp.where(mask[:, None, :], scores, jnp.finfo(scores.dtype).min)
     w = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
     return jnp.einsum("bhn,bnhd->bhd", w, vq)
+
+
+@jax.jit
+def gather_slots(dev_k: jax.Array, dev_v: jax.Array, slots: jax.Array,
+                 tail_k: tuple, tail_v: tuple) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Assemble the decode context from persistent device buffers.
+
+    The device-resident analogue of ``KVCacheManager.gather``: instead of a
+    fresh host concat + full upload per layer, the selected-KV working set
+    already lives on device (``dev_k/dev_v [B, C, G, H_kv, d]`` — the reuse
+    buffer's mirror) and this gathers it by the step's slot permutation.
+
+    ``slots [B, M]`` is the full per-step addressing: slot index where the
+    group is resident, ``-1`` where the selection mask is off (clamped for
+    the gather, turned into the token mask here — no separate mask upload),
+    ``-2`` for transiently staged groups (gathered wrong on purpose; the
+    caller overrides those rows).  ``tail_k/tail_v`` are tuples of the last
+    ``fill`` decoded tokens' ``[B, H_kv, d]`` — still on device from
+    ``decode_block``, never round-tripped; the tuple length is part of the
+    jit cache key, so each fill level compiles once (same as the host path's
+    context-shape variants).
+
+    Returns ``(k_ctx, v_ctx, token_mask)`` with ``k_ctx [B, M·G + fill,
+    H_kv, d]`` — the exact shape/dtype/values the host-gather path feeds
+    ``decode_block``, except that slots the mask disables hold stale (finite)
+    data rather than zeros; masked attention weights underflow to exactly 0
+    either way, which is what keeps the two paths bit-identical.
+    """
+    b, m = slots.shape
+    c, g = dev_k.shape[1], dev_k.shape[2]
+    idx = jnp.clip(slots, 0, c - 1)[..., None, None, None]        # [B,M,1,1,1]
+    k_sel = jnp.take_along_axis(dev_k, idx, axis=1)               # [B,M,G,Hk,d]
+    v_sel = jnp.take_along_axis(dev_v, idx, axis=1)
+    k_ctx = k_sel.reshape(b, m * g, *dev_k.shape[3:])
+    v_ctx = v_sel.reshape(b, m * g, *dev_v.shape[3:])
+    tok_mask = jnp.repeat(slots != -1, g, axis=1)                 # [B, M·G]
+    if tail_k:
+        tk = jnp.stack(tail_k, axis=1).astype(dev_k.dtype)        # [B,fill,Hk,d]
+        tv = jnp.stack(tail_v, axis=1).astype(dev_v.dtype)
+        k_ctx = jnp.concatenate([k_ctx, tk], axis=1)
+        v_ctx = jnp.concatenate([v_ctx, tv], axis=1)
+        tok_mask = jnp.concatenate(
+            [tok_mask, jnp.ones((b, len(tail_k)), bool)], axis=1)
+    return k_ctx, v_ctx, tok_mask
 
 
 # --------------------------------------------------------------------------

@@ -1,6 +1,9 @@
 """Samplers for the serving loop: greedy, temperature, top-k, top-p.
 
 Pure-JAX, jittable; the BatchServer takes any ``sampler(logits) -> tokens``.
+``device=True`` variants keep the drawn tokens on device so a tight decode
+loop (``KVSwapEngine.generate``) never bounces logits through numpy per
+token — the only host transfer is the final stack of generated ids.
 """
 
 from __future__ import annotations
@@ -11,14 +14,27 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+_argmax = jax.jit(lambda lg: jnp.argmax(lg, axis=-1))
+
 
 def greedy(logits) -> np.ndarray:
-    return np.asarray(jnp.argmax(logits, axis=-1))
+    return np.asarray(_argmax(logits))
+
+
+def greedy_device(logits) -> jax.Array:
+    """Jitted argmax returning the device array (no per-token host pull)."""
+    return _argmax(logits)
 
 
 def make_sampler(*, temperature: float = 1.0, top_k: int = 0, top_p: float = 0.0,
-                 seed: int = 0):
-    """Stateful (auto-splitting) categorical sampler."""
+                 seed: int = 0, device: bool = False):
+    """Stateful (auto-splitting) categorical sampler.
+
+    One vectorized ``jax.random.categorical`` draw over the whole batch per
+    call.  With ``device=True`` the sampler returns the device array instead
+    of pulling to numpy (same draws; callers that index rows should keep the
+    default).
+    """
     key_holder = {"key": jax.random.PRNGKey(seed)}
 
     @functools.partial(jax.jit, static_argnames=())
@@ -38,8 +54,9 @@ def make_sampler(*, temperature: float = 1.0, top_k: int = 0, top_p: float = 0.0
             lg = jnp.where(lg < cutoff, -jnp.inf, lg)
         return jax.random.categorical(key, lg, axis=-1)
 
-    def sampler(logits) -> np.ndarray:
+    def sampler(logits):
         key_holder["key"], sub = jax.random.split(key_holder["key"])
-        return np.asarray(_sample(sub, logits))
+        drawn = _sample(sub, logits)
+        return drawn if device else np.asarray(drawn)
 
     return sampler
