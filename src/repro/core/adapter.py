@@ -70,14 +70,17 @@ class ModelAdapter(Protocol):
         dev_k: jax.Array,        # [B, C, G, H_kv, d] device reuse mirror (K)
         dev_v: jax.Array,        # [B, C, G, H_kv, d] device reuse mirror (V)
         slots: jax.Array,        # [B, M] slot permutation (-1 invalid, -2 staged)
-        tail_k,                  # sequence of [B, H_kv, d]: device rolling tail
-        tail_v,                  # sequence of [B, H_kv, d]
+        tail_k: jax.Array,       # [B, G, H_kv, d] device rolling tail (K)
+        tail_v: jax.Array,       # [B, G, H_kv, d]
+        tail_fill: jax.Array,    # [B] valid tail tokens per row
     ):
         """OPTIONAL — device-resident context assembly.  Gather the selected
         groups from the persistent device buffers by slot index and append
-        the rolling tail; returns the ``(k_ctx, v_ctx, ctx_mask)`` triple
-        :meth:`decode_block` takes.  Adapters without it force the engine's
-        host-gather path (``EngineConfig.device_resident`` is ignored)."""
+        the rolling tail (masked per row by ``tail_fill`` — rows advance
+        independently under continuous batching); returns the ``(k_ctx,
+        v_ctx, ctx_mask)`` triple :meth:`decode_block` takes.  Adapters
+        without it force the engine's host-gather path
+        (``EngineConfig.device_resident`` is ignored)."""
         ...
 
     def predict_query(self, params, layer: int, x: jax.Array, positions: jax.Array) -> jax.Array:

@@ -31,6 +31,23 @@ KV working set lives between steps:
 * **host-gather** (``device_resident=False``, the seed behavior) — every
   layer re-materializes the full context on host and re-uploads it.  Kept as
   the A/B control; decoded tokens are **bit-identical** between the two.
+
+**Per-slot request lifecycle (continuous batching).**  Every piece of
+per-sequence state — sequence length, compressed-cache watermark, rolling
+fill, reuse slots, disk extents — is tracked **per batch row**, and an
+active-row mask is threaded through prediction, fetch and the modeled
+compute/IO accounting.  :meth:`KVSwapEngine.admit_row` prefills one prompt
+into a free slot (restoring a cached prefix when a
+:class:`~repro.cache.PrefixCache` is handed in) while the other slots keep
+decoding, and :meth:`KVSwapEngine.retire_row` frees the slot's mapping-table
+groups, reuse-buffer slots, device-mirror addressing, and disk extents for
+the next tenant.  Inactive (retired or never-admitted) rows select no
+groups, so they issue **no disk reads and charge no modeled time**.  The
+classic lockstep entry points (:meth:`prefill` + :meth:`decode_step` over a
+whole batch) are the same code path with every row admitted at once, which
+is what keeps continuous batching bit-identical to the static batcher for
+identical arrival patterns.  :class:`repro.serving.api.ServeSession` is the
+front end that drives this lifecycle.
 """
 
 from __future__ import annotations
@@ -139,6 +156,7 @@ class StepStats:
     wall_seconds: float = 0.0        # measured wall time of this step
     io_wait_seconds: float = 0.0     # measured wall time blocked on fetches
     h2d_bytes: int = 0               # host→device KV payload bytes this step
+    active_rows: int = 0             # rows decoded this step (continuous batching)
 
     @property
     def overlap_saved_seconds(self) -> float:
@@ -146,10 +164,56 @@ class StepStats:
         return max(0.0, self.io_seconds + self.compute_seconds - self.pipelined_seconds)
 
 
+def summarize_steps(steps: Sequence[StepStats]) -> dict:
+    """Mean per-step modeled + measured overlap over a window of steps.
+
+    Shared by :meth:`KVSwapEngine.overlap_report` (whole-engine view) and the
+    serving session, which summarizes only its own flush window of a
+    persistent engine's ``step_log``.
+    """
+    if not steps:
+        return {}
+    n = len(steps)
+    mean = lambda f: sum(f(s) for s in steps) / n
+    return {
+        "io_seconds": mean(lambda s: s.io_seconds),
+        "compute_seconds": mean(lambda s: s.compute_seconds),
+        "pipelined_seconds": mean(lambda s: s.pipelined_seconds),
+        "overlap_saved_seconds": mean(lambda s: s.overlap_saved_seconds),
+        "wall_seconds": mean(lambda s: s.wall_seconds),
+        "io_wait_seconds": mean(lambda s: s.io_wait_seconds),
+        "h2d_bytes": mean(lambda s: s.h2d_bytes),
+        "active_rows": mean(lambda s: s.active_rows),
+    }
+
+
 @functools.partial(jax.jit, donate_argnums=(0,))
 def _klr_append(k_lr: jax.Array, rows: jax.Array, start: jax.Array) -> jax.Array:
     """Write ``rows [B, G, r]`` into the preallocated ``k_lr [B, cap, r]``."""
     return jax.lax.dynamic_update_slice(k_lr, rows, (0, start, 0))
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _klr_append_row(k_lr: jax.Array, rows: jax.Array, bi: jax.Array,
+                    start: jax.Array) -> jax.Array:
+    """Write ``rows [1, n, r]`` into row ``bi`` of ``k_lr [B, cap, r]`` at
+    token offset ``start`` — the per-row flush/admission unit of continuous
+    batching (rows hit group boundaries at different steps)."""
+    return jax.lax.dynamic_update_slice(k_lr, rows, (bi, start, 0))
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _tail_write(tail: jax.Array, new: jax.Array, fidx: jax.Array,
+                active: jax.Array) -> jax.Array:
+    """Scatter one decoded token per row into the device rolling mirror.
+
+    ``tail [B, G, H_kv, d]``; ``new [B, H_kv, d]``; ``fidx [B]`` each row's
+    write position (its pre-append fill); ``active [B]`` bool — inactive rows
+    keep their current contents (their fill does not advance either)."""
+    rows = jnp.arange(tail.shape[0])
+    cur = tail[rows, fidx]
+    upd = jnp.where(active[:, None, None], new.astype(tail.dtype), cur)
+    return tail.at[rows, fidx].set(upd)
 
 
 class KVSwapEngine:
@@ -226,8 +290,12 @@ class KVSwapEngine:
             jnp.zeros((batch, self.cap_tokens, cfg.rank), dtype=jnp.float32)
             for _ in range(n_kv_layers)
         ]
-        self.valid_tokens = 0        # tokens represented in k_lr (= n_groups·G)
-        self.seq_len = 0             # total tokens seen (incl. rolling tail)
+        # per-row request lifecycle (continuous batching): every row is an
+        # independently admitted/retired slot; the lockstep prefill() path
+        # simply sets all rows at once
+        self.row_active = np.zeros(batch, dtype=bool)
+        self.row_seq = np.zeros(batch, dtype=np.int64)    # tokens seen (incl. tail)
+        self.row_valid = np.zeros(batch, dtype=np.int64)  # tokens in k_lr (n_groups·G)
         self.pred_cfg = PredictorConfig(
             group_size=g, n_select=cfg.n_select,
             n_heads=model.n_heads, n_kv_heads=model.n_kv_heads,
@@ -239,18 +307,33 @@ class KVSwapEngine:
         )
         self.step_log: list[StepStats] = []
         self.prefill_report: dict = {}
+        self.admit_log: list[dict] = []   # one report per admit_row/prefill
         self._prompt_np: np.ndarray | None = None
         # device-resident decode state (built lazily at the first decode step
         # so prefill seeds the host buffers first); adapters without
         # gather_context fall back to the host-gather path
         self.device_resident = bool(cfg.device_resident
                                     and hasattr(model, "gather_context"))
-        # device rolling tail: per layer, the last fill tokens' k/v as the
-        # decode_block outputs (still on device, never round-tripped)
-        self._tail_k: list[list[jax.Array]] = [[] for _ in range(n_kv_layers)]
-        self._tail_v: list[list[jax.Array]] = [[] for _ in range(n_kv_layers)]
+        # device rolling tail: per layer, a fixed [B, G, H_kv, d] mirror of
+        # the rolling buffer holding the last < G decoded tokens per row
+        # (written in place by decode, still on device, never round-tripped;
+        # per-row validity comes from RollingBuffer.fills)
+        self._tail_k: list[jax.Array | None] = [None] * n_kv_layers
+        self._tail_v: list[jax.Array | None] = [None] * n_kv_layers
         self._dev_ready = False
         self._h2d_step = 0
+        self._step_active = np.zeros(batch, dtype=bool)
+
+    # -- per-row lifecycle views ----------------------------------------
+    @property
+    def seq_len(self) -> int:
+        """Longest row's token count — the lockstep view (uniform batches)."""
+        return int(self.row_seq.max(initial=0))
+
+    @property
+    def valid_tokens(self) -> int:
+        """Longest row's compressed-cache watermark (lockstep view)."""
+        return int(self.row_valid.max(initial=0))
 
     # ------------------------------------------------------------------
     def _fetch_table(self, j: int, ids: np.ndarray, mask: np.ndarray):
@@ -262,8 +345,9 @@ class KVSwapEngine:
         """In-memory footprint of KVSwap state (the paper's Fig. 3a metric)."""
         # logical = bytes holding *valid* compressed keys, summed over the
         # layers that own a k_lr — KV layers only (hybrid models' state
-        # layers have none), not model.n_layers
-        klr = self.batch * self.valid_tokens * self.cfg.rank * 4
+        # layers have none), not model.n_layers; rows count their own
+        # watermark (continuous batching admits them at different lengths)
+        klr = int(self.row_valid.sum()) * self.cfg.rank * 4
         klr_alloc = sum(int(np.prod(k.shape)) * 4 for k in self.k_lr)
         reuse = sum(r.nbytes for r in self.reuse)
         rolling = sum(r.nbytes for r in self.rolling)
@@ -282,11 +366,12 @@ class KVSwapEngine:
         return out
 
     # ------------------------------------------------------------------
-    def _modeled_prefill_compute(self, n_new: int, n_ctx0: int) -> float:
+    def _modeled_prefill_compute(self, n_new: int, n_ctx0: int,
+                                 batch: int | None = None) -> float:
         """Modeled compute seconds to (chunked-)prefill ``n_new`` tokens."""
         return self.model.n_layers * hardware.prefill_layer_time(
             self.compute_spec, self.dims, n_new=n_new, n_ctx0=n_ctx0,
-            batch=self.batch)
+            batch=self.batch if batch is None else batch)
 
     def _finish_prefill_report(self, *, s: int, n_cached: int, tr, wall: float) -> None:
         """Modeled + measured prefill accounting (cold and warm paths).
@@ -309,6 +394,7 @@ class KVSwapEngine:
             "modeled_cold_seconds": cold_compute + tr.write_seconds,
             "wall_seconds": wall,
         }
+        self.admit_log.append(dict(self.prefill_report))
 
     def _spill_prefill_layer(self, j: int, k_np: np.ndarray, v_np: np.ndarray,
                              k_dev: jax.Array, s: int) -> None:
@@ -335,6 +421,8 @@ class KVSwapEngine:
         b, s = tokens.shape
         if b != self.batch:
             raise ValueError(f"batch mismatch {b} != {self.batch}")
+        for bi in range(self.batch):   # lockstep admission of every slot
+            self._free_row(bi)
         g = self.cfg.group_size
         positions = jnp.arange(s)[None, :].repeat(b, axis=0)
         x = self.model.embed(self.params, tokens)
@@ -349,8 +437,9 @@ class KVSwapEngine:
                 k_np = np.asarray(jax.device_get(k), dtype=self.cfg.np_dtype)
                 v_np = np.asarray(jax.device_get(v), dtype=self.cfg.np_dtype)
                 self._spill_prefill_layer(j, k_np, v_np, k, s)
-        self.valid_tokens = (s // g) * g
-        self.seq_len = s
+        self.row_valid[:] = (s // g) * g
+        self.row_seq[:] = s
+        self.row_active[:] = True
         logits = self.model.logits(self.params, x[:, -1])
         self._finish_prefill_report(s=s, n_cached=0, tr=tr,
                                     wall=time.perf_counter() - t0)
@@ -408,6 +497,8 @@ class KVSwapEngine:
         n_blocks = n_cached // cache.cfg.block_tokens
         chains = [ch[:n_blocks] for ch in chains]
         self._reset_device_state()   # mirrors rebuilt at first decode
+        for bi in range(self.batch):   # lockstep admission of every slot
+            self._free_row(bi)
 
         with self.accountant.track() as tr:
             # identical rows (shared system prompts, padded clones) resolve
@@ -441,16 +532,149 @@ class KVSwapEngine:
                     [v_pre[j], np.asarray(jax.device_get(v_suf), dtype=self.cfg.np_dtype)], axis=1)
                 self._spill_prefill_layer(
                     j, k_np, v_np, jnp.concatenate([kp, k_suf], axis=1), s)
-        self.valid_tokens = ng * g
-        self.seq_len = s
+        self.row_valid[:] = ng * g
+        self.row_seq[:] = s
+        self.row_active[:] = True
         self._prompt_np = tokens_np
         logits = self.model.logits(self.params, x[:, -1])
         self._finish_prefill_report(s=s, n_cached=n_cached, tr=tr,
                                     wall=time.perf_counter() - t0)
         return logits
 
+    # -- per-slot request lifecycle (continuous batching) ----------------
+    def admit_row(self, bi: int, tokens: np.ndarray, cache=None) -> jax.Array:
+        """Prefill one prompt into free slot ``bi`` while other slots keep
+        decoding; returns the slot's last-position logits ``[V]``.
+
+        The single-row analogue of :meth:`prefill` (and, with ``cache``, of
+        :meth:`prefill_cached`): the prompt runs through the model as a
+        batch-1 forward, its KV spills into row ``bi`` of the shared disk
+        store, the rolling tail seeds row ``bi``, and the compressed K cache
+        gets the row's groups — no other row's state is touched, so slots
+        already mid-decode are unaffected.  With a
+        :class:`~repro.cache.PrefixCache` attached the longest cached prefix
+        is restored from the cache slab instead of recomputed (chunked
+        suffix prefill, same bit-identity contract as
+        :meth:`prefill_cached`).
+
+        ``prefill_report`` (and ``admit_log``) record the admission's
+        modeled seconds, which a serving session charges to its clock.
+        """
+        if self.row_active[bi]:
+            raise RuntimeError(f"slot {bi} is busy; retire it first")
+        if any(kind != "kv" for kind in self.layer_kinds):
+            raise ValueError("admit_row requires attention-only models "
+                             "(recurrent state has no per-row lifecycle)")
+        tokens_np = np.asarray(jax.device_get(tokens)).reshape(-1).astype(np.int64)
+        s = int(tokens_np.shape[0])
+        if s < 1:
+            raise ValueError("empty prompt")
+        if s > self.cap_tokens:
+            raise RuntimeError("prompt exceeds KV capacity; raise cfg.max_seq")
+        t0 = time.perf_counter()
+        self._free_row(bi)
+        g = self.cfg.group_size
+        ng = s // g
+        nkv = len(self.kv_layers)
+        warm = (cache is not None
+                and hasattr(self.model, "prefill_block_with_ctx"))
+        n_cached = 0
+        k_pre = v_pre = None
+        with self.accountant.track() as tr:
+            if warm:
+                cache.open(n_layers=nkv, group_size=g,
+                           n_kv_heads=self.model.n_kv_heads,
+                           head_dim=self.model.head_dim, dtype=self.cfg.np_dtype)
+                cache.use_accountant(self.accountant)
+                chain = cache.match(tokens_np, max_tokens=s - 1)
+                n_cached = sum(m.n_tokens for m in chain)
+                if n_cached:
+                    cache.pin(chain)
+                    try:
+                        k_pre, v_pre = cache.read_chain(chain)  # [nkv, n_cached, hkv, d]
+                    finally:
+                        cache.unpin(chain)
+            positions = jnp.arange(n_cached, s)[None, :]
+            x = self.model.embed(self.params, jnp.asarray(tokens_np[None, n_cached:]))
+            for layer in range(self.model.n_layers):
+                j = self._kv_index[layer]
+                if n_cached:
+                    kp = jnp.asarray(k_pre[j][None])
+                    vp = jnp.asarray(v_pre[j][None])
+                    x, k_suf, v_suf = self.model.prefill_block_with_ctx(
+                        self.params, layer, x, positions, kp, vp)
+                    k_dev = jnp.concatenate([kp, k_suf], axis=1)
+                    k_np = np.concatenate(
+                        [k_pre[j], np.asarray(jax.device_get(k_suf[0]),
+                                              dtype=self.cfg.np_dtype)], axis=0)
+                    v_np = np.concatenate(
+                        [v_pre[j], np.asarray(jax.device_get(v_suf[0]),
+                                              dtype=self.cfg.np_dtype)], axis=0)
+                else:
+                    x, k, v = self.model.prefill_block(self.params, layer, x, positions)
+                    k_dev = k
+                    k_np = np.asarray(jax.device_get(k[0]), dtype=self.cfg.np_dtype)
+                    v_np = np.asarray(jax.device_get(v[0]), dtype=self.cfg.np_dtype)
+                self.store.write_prefill_row(j, bi, k_np, v_np)
+                if s - ng * g:
+                    self.rolling[j].seed_row(bi, k_np[ng * g:], v_np[ng * g:])
+                if ng:
+                    rows = compress_k(k_dev[:, : ng * g].astype(jnp.float32),
+                                      self.adapter)
+                    self.k_lr[j] = _klr_append_row(
+                        self.k_lr[j], rows, jnp.int32(bi), jnp.int32(0))
+                if self._dev_ready:
+                    # seed the device rolling mirror's row from the host tail
+                    self._tail_k[j] = self._tail_k[j].at[bi].set(
+                        jnp.asarray(self.rolling[j].k[bi]).astype(self._tail_k[j].dtype))
+                    self._tail_v[j] = self._tail_v[j].at[bi].set(
+                        jnp.asarray(self.rolling[j].v[bi]).astype(self._tail_v[j].dtype))
+        self.row_seq[bi] = s
+        self.row_valid[bi] = ng * g
+        self.row_active[bi] = True
+        logits = self.model.logits(self.params, x[:, -1])[0]
+        compute = self._modeled_prefill_compute(s - n_cached, n_cached, batch=1)
+        cold = self._modeled_prefill_compute(s, 0, batch=1)
+        self.prefill_report = {
+            "prompt_tokens": s,
+            "cached_tokens": n_cached,
+            "computed_tokens": s - n_cached,
+            "restore_seconds": tr.read_seconds,
+            "write_seconds": tr.write_seconds,
+            "compute_seconds": compute,
+            "modeled_seconds": tr.read_seconds + tr.write_seconds + compute,
+            "modeled_cold_seconds": cold + tr.write_seconds,
+            "wall_seconds": time.perf_counter() - t0,
+            "row": bi,
+        }
+        self.admit_log.append(dict(self.prefill_report))
+        return logits
+
+    def retire_row(self, bi: int) -> None:
+        """End slot ``bi``'s request and free everything it held: mapping
+        addressing (reuse slot table), reuse-buffer slots, rolling tail,
+        device-mirror reachability, disk extents, and the compressed-cache
+        watermark.  The slot becomes admissible immediately; publishing to a
+        prefix cache (if any) is the *caller's* job and must happen before
+        retirement (the disk extents are recycled here)."""
+        self.row_active[bi] = False
+        self._free_row(bi)
+
+    def deactivate_row(self, bi: int) -> None:
+        """Mask slot ``bi`` out of decoding without freeing its state (stop
+        tokens: a stopped row issues no reads and charges no time, but its
+        KV stays publishable until :meth:`retire_row`)."""
+        self.row_active[bi] = False
+
+    def _free_row(self, bi: int) -> None:
+        for j in range(len(self.kv_layers)):
+            self.managers[j].free_row(bi)
+        self.store.free_row(bi)
+        self.row_seq[bi] = 0
+        self.row_valid[bi] = 0
+
     def publish(self, cache, tokens: np.ndarray | Sequence[np.ndarray] | None = None,
-                rows: Sequence[int] | None = None) -> int:
+                rows: Sequence[int] | None = None, save: bool = True) -> int:
         """Publish this request's KV into ``cache`` (end-of-request hook).
 
         ``tokens`` is the per-row served token history (prompt + every token
@@ -462,7 +686,10 @@ class KVSwapEngine:
         the same approximation this engine itself continues with).
 
         Blocks are published root-first and deduplicated by content hash;
-        returns the number of newly resident blocks.
+        returns the number of newly resident blocks.  ``save=False`` defers
+        the manifest write — per-request publishers (the serving session
+        retires rows one at a time) save once at drain instead of rewriting
+        the manifest per retirement.
         """
         if any(kind != "kv" for kind in self.layer_kinds):
             return 0
@@ -508,7 +735,8 @@ class KVSwapEngine:
                 if not cache.put_block(blk, k[:, off:off + bg], v[:, off:off + bg]):
                     break   # budget exhausted by pinned blocks; keep the chain rooted
                 published += 1
-        cache.save()
+        if save:
+            cache.save()
         return published
 
     # ------------------------------------------------------------------
@@ -518,32 +746,50 @@ class KVSwapEngine:
         Sync and async modes share every numeric call (prediction, gather,
         block compute) on identical inputs, so their outputs are
         bit-identical; async mode only moves the disk reads off the critical
-        path (§3.3's overlap)."""
-        if self.seq_len + 1 > self.cap_tokens:
+        path (§3.3's overlap).
+
+        Only **active** rows decode: inactive (retired/stopped/empty) slots
+        select no groups, fetch nothing, append nothing, and charge no
+        modeled time — their logits rows are garbage the caller must ignore.
+        Token values for inactive rows are ignored.  A row's numeric stream
+        depends only on its own state, so tokens match the lockstep path for
+        identical arrival patterns bit for bit."""
+        active = self.row_active.copy()
+        n_active = int(active.sum())
+        if n_active == 0:
+            raise RuntimeError("no active rows (prefill or admit_row first)")
+        if (self.row_seq[active] + 1 > self.cap_tokens).any():
             raise RuntimeError("KV capacity exceeded; raise cfg.max_seq")
         t0 = time.perf_counter()
         if self.device_resident:
             self._ensure_device_state()
         self._h2d_step = 0
+        self._step_active = active
         b = self.batch
-        tok = jnp.asarray(token_ids).reshape(b, 1)
-        pos = jnp.full((b,), self.seq_len, dtype=jnp.int32)
+        if n_active == b:
+            tok = jnp.asarray(token_ids).reshape(b, 1)   # stays on device
+        else:
+            tok = jnp.asarray(
+                np.where(active, np.asarray(token_ids).reshape(b), 0)
+            ).reshape(b, 1)
+        pos = jnp.asarray(self.row_seq.astype(np.int32))
         x = self.model.embed(self.params, tok)[:, 0]
-        valid = jnp.int32(self.valid_tokens)
+        valid = jnp.asarray(self.row_valid.astype(np.int32))
 
         t_compute: list[float] = []
         t_io: list[float] = []
-        flush_rows: list[tuple[int, jax.Array]] = []
+        flush_rows: list[tuple[int, int, jax.Array]] = []   # (layer, row, k_lr rows)
         if self.prefetcher is not None:
             x, io_wait = self._layers_async(x, pos, valid, t_compute, t_io, flush_rows)
         else:
             x, io_wait = self._layers_sync(x, pos, valid, t_compute, t_io, flush_rows)
 
-        for layer, rows in flush_rows:
-            self.k_lr[layer] = _klr_append(self.k_lr[layer], rows, jnp.int32(self.valid_tokens))
-        if flush_rows:
-            self.valid_tokens += self.cfg.group_size
-        self.seq_len += 1
+        for layer, bi, rows in flush_rows:
+            self.k_lr[layer] = _klr_append_row(
+                self.k_lr[layer], rows, jnp.int32(bi), jnp.int32(self.row_valid[bi]))
+        for bi in {bi for _, bi, _ in flush_rows}:
+            self.row_valid[bi] += self.cfg.group_size
+        self.row_seq[active] += 1
 
         stats = StepStats()
         stats.io_seconds = sum(t_io)
@@ -554,6 +800,7 @@ class KVSwapEngine:
         stats.io_requests = snap["read_requests"]
         stats.io_wait_seconds = io_wait
         stats.h2d_bytes = self._h2d_step
+        stats.active_rows = n_active
         stats.wall_seconds = time.perf_counter() - t0
         self.step_log.append(stats)
         return self.model.logits(self.params, x)
@@ -566,8 +813,8 @@ class KVSwapEngine:
         self._dev_ready = False
         for j in range(len(self.kv_layers)):
             self.reuse[j].device = None
-            self._tail_k[j] = []
-            self._tail_v[j] = []
+            self._tail_k[j] = None
+            self._tail_v[j] = None
 
     def _ensure_device_state(self) -> None:
         """Build the per-layer device mirrors at the first decode step: the
@@ -580,11 +827,10 @@ class KVSwapEngine:
             mirror = self.reuse[j].attach_device_mirror()
             if j == 0:   # jit cache is shared across layers (same shapes)
                 mirror.prewarm(self.batch * self.cfg.n_select)
-            fill = self.rolling[j].fill
-            self._tail_k[j] = [jnp.asarray(self.rolling[j].k[:, t])
-                               for t in range(fill)]
-            self._tail_v[j] = [jnp.asarray(self.rolling[j].v[:, t])
-                               for t in range(fill)]
+            # whole [B, G] rolling mirror; per-row validity lives in
+            # RollingBuffer.fills (stale columns are masked at gather)
+            self._tail_k[j] = jnp.asarray(self.rolling[j].k).astype(jnp.float32)
+            self._tail_v[j] = jnp.asarray(self.rolling[j].v).astype(jnp.float32)
         self._dev_ready = True
 
     # -- per-layer pieces shared by both modes --------------------------
@@ -594,10 +840,12 @@ class KVSwapEngine:
 
         The prediction itself is one fused dispatch (:meth:`_predict`); the
         device ``(ids, mask)`` pair is pulled to host in a single transfer
-        here, just before the fetch needs it."""
+        here, just before the fetch needs it.  Inactive rows are masked out
+        on host — they select no groups, so the fetch issues no disk reads
+        for them (the active-row contract of continuous batching)."""
         q_pred = self.model.predict_query(self.params, layer, pred_src, pos)
         ids, mask = jax.device_get(self._predict(j, q_pred, valid))
-        return ids, mask
+        return ids, mask & self._step_active[:, None]
 
     def _state_layer(self, layer: int, x: jax.Array, pos: jax.Array,
                      t_compute: list[float]) -> jax.Array:
@@ -606,7 +854,7 @@ class KVSwapEngine:
         )
         t_compute.append(
             hardware.decode_layer_time(self.compute_spec, self.dims, n_ctx=0,
-                                       batch=self.batch)
+                                       batch=int(self._step_active.sum()))
         )
         return x
 
@@ -628,15 +876,16 @@ class KVSwapEngine:
             self.params, layer, x, pos,
             jnp.asarray(k_ctx), jnp.asarray(v_ctx), jnp.asarray(tok_mask),
         )
-        flushed = self.managers[j].append_token(
+        completed = self.managers[j].append_token_rows(
             np.asarray(jax.device_get(k_new), dtype=cfg.np_dtype),
             np.asarray(jax.device_get(v_new), dtype=cfg.np_dtype),
+            self._step_active,
         )
-        if flushed is not None:
+        for bi, k_g, _ in completed:
             # compress the completed group's keys exactly as stored on disk
-            k_g = jnp.asarray(flushed[0], dtype=jnp.float32)
-            self._h2d_step += k_g.nbytes
-            flush_rows.append((j, compress_k(k_g, self.adapter)))
+            k_gj = jnp.asarray(k_g[None], dtype=jnp.float32)
+            self._h2d_step += k_gj.nbytes
+            flush_rows.append((j, bi, compress_k(k_gj, self.adapter)))
         self._charge_layer_compute(j, k_ctx.shape[1] + 1, t_compute)
         return x
 
@@ -659,7 +908,8 @@ class KVSwapEngine:
         mirror = self.reuse[j].device
         k_ctx, v_ctx, tok_mask = self.model.gather_context(
             mirror.k, mirror.v, jnp.asarray(table.slots),
-            self._tail_k[j], self._tail_v[j])
+            self._tail_k[j], self._tail_v[j],
+            jnp.asarray(table.rolling_fill.astype(np.int32)))
         # overflow groups that couldn't enter the pinned-full reuse buffer
         # (slots == -2) are staged on host: upload transiently and overwrite
         # their gathered rows (rare — C smaller than the step's working set).
@@ -685,28 +935,32 @@ class KVSwapEngine:
                 v_ctx = v_ctx.at[bb, tt].set(jnp.asarray(np.concatenate(pay_v)))
         x, k_new, v_new = self.model.decode_block(
             self.params, layer, x, pos, k_ctx, v_ctx, tok_mask)
-        self._tail_k[j].append(k_new)
-        self._tail_v[j].append(v_new)
-        if mgr.rolling.advance():
-            # group complete: stack the device tail once (cast exactly as
-            # the host path stores it); one download feeds the disk spill,
-            # the k_lr append compresses straight from the device copy
-            grp_k = jnp.stack(self._tail_k[j], axis=1).astype(cfg.np_dtype)
-            grp_v = jnp.stack(self._tail_v[j], axis=1).astype(cfg.np_dtype)
-            self._tail_k[j] = []
-            self._tail_v[j] = []
+        # scatter each active row's fresh token into its own tail position
+        # (rows sit at different fills under continuous batching)
+        act = jnp.asarray(self._step_active)
+        fidx = jnp.asarray(mgr.rolling.fills.astype(np.int32))
+        self._tail_k[j] = _tail_write(self._tail_k[j], k_new, fidx, act)
+        self._tail_v[j] = _tail_write(self._tail_v[j], v_new, fidx, act)
+        for bi in mgr.rolling.advance_rows(self._step_active):
+            # row's group complete: cast exactly as the host path stores it;
+            # one download feeds the disk spill, the k_lr append compresses
+            # straight from the device copy
+            grp_k = self._tail_k[j][bi].astype(cfg.np_dtype)
+            grp_v = self._tail_v[j][bi].astype(cfg.np_dtype)
             k_np, v_np = (np.asarray(a) for a in jax.device_get((grp_k, grp_v)))
-            mgr.spill_group(k_np, v_np)
+            mgr.spill_group_row(bi, k_np, v_np)
             flush_rows.append(
-                (j, compress_k(grp_k.astype(jnp.float32), self.adapter)))
+                (j, bi, compress_k(grp_k[None].astype(jnp.float32), self.adapter)))
         self._charge_layer_compute(j, k_ctx.shape[1] + 1, t_compute)
         return x
 
     def _charge_layer_compute(self, j: int, n_ctx: int,
                               t_compute: list[float]) -> None:
+        # only active rows charge modeled time (retired/empty slots are free)
         t_compute.append(
             hardware.decode_layer_time(
-                self.compute_spec, self.dims, n_ctx=n_ctx, batch=self.batch,
+                self.compute_spec, self.dims, n_ctx=n_ctx,
+                batch=int(self._step_active.sum()),
                 rank=self.cfg.rank, n_lr_tokens=self.valid_tokens,
             )
         )
@@ -781,7 +1035,9 @@ class KVSwapEngine:
         → select_groups`` under a single jit; Pallas scoring kernel when
         ``use_pallas``), returning device ``(ids, mask)``.  Both engine
         paths (``device_resident`` on/off) share this implementation, which
-        is part of what keeps their decoded tokens bit-identical.
+        is part of what keeps their decoded tokens bit-identical.  ``valid``
+        is the per-row ``[B]`` compressed-cache watermark — rows admitted at
+        different lengths (continuous batching) mask their own tails.
         """
         q32 = q_pred.astype(jnp.float32)
         if self.cfg.use_pallas:
@@ -789,8 +1045,7 @@ class KVSwapEngine:
             from repro.models import layers as _L
 
             return fused_predict_pallas(
-                q32, self._per_head_a, self.k_lr[layer],
-                jnp.full((q32.shape[0],), valid, jnp.int32),
+                q32, self._per_head_a, self.k_lr[layer], valid,
                 group_size=self.cfg.group_size, n_select=self.cfg.n_select,
                 interpret=_L.PALLAS_INTERPRET)
         from repro.core.predictor import fused_predict
@@ -811,7 +1066,9 @@ class KVSwapEngine:
         return lat
 
     # ------------------------------------------------------------------
-    def generate(self, prompt: np.ndarray, n_new: int, *, greedy: bool = True, rng: np.random.Generator | None = None) -> np.ndarray:
+    def generate(self, prompt: np.ndarray, n_new: int, *, greedy: bool = True,
+                 rng: np.random.Generator | None = None,
+                 stop_ids: Sequence[int] = ()) -> np.ndarray:
         """Prefill + ``n_new`` decode steps.  Returns ``[B, n_new]`` tokens.
 
         Sampling is jitted and the drawn ids stay on device between steps:
@@ -821,6 +1078,12 @@ class KVSwapEngine:
         softmax loop).  ``rng`` only seeds the JAX key, keeping the old
         signature; the generated ``[B, n_new]`` block is pulled to host once
         at the end.
+
+        ``stop_ids``: per-row EOS handling.  A row that emits a stop token is
+        **masked, not decoded-and-truncated** — it is deactivated on the spot
+        (no further disk reads, no modeled time) and its remaining positions
+        repeat the stop token; ``last_stop_mask`` reports which rows stopped
+        early.  When every row has stopped the loop exits.
         """
         from repro.serving import sampling as _sampling
 
@@ -830,12 +1093,34 @@ class KVSwapEngine:
         else:
             seed = 0 if rng is None else int(rng.integers(0, 2**31 - 1))
             sample = _sampling.make_sampler(seed=seed, device=True)
-        out = []
-        for _ in range(n_new):
-            nxt = sample(logits)
+        stop_set = np.asarray(sorted({int(t) for t in stop_ids}), dtype=np.int64)
+        stopped = np.zeros(self.batch, dtype=bool)
+        self.last_stop_mask = stopped
+        if not stop_set.size:   # fast path: drawn ids stay on device
+            out_dev = []
+            for _ in range(n_new):
+                nxt = sample(logits)
+                out_dev.append(nxt)
+                logits = self.decode_step(nxt)
+            return np.asarray(jnp.stack(out_dev, axis=1))
+        stop_tok = np.zeros(self.batch, dtype=np.int64)
+        out: list[np.ndarray] = []
+        for step in range(n_new):
+            nxt = np.asarray(sample(logits)).astype(np.int64)
+            nxt = np.where(stopped, stop_tok, nxt)         # frozen rows repeat
+            newly = np.isin(nxt, stop_set) & ~stopped
+            for bi in np.flatnonzero(newly):
+                self.deactivate_row(bi)
+            stop_tok = np.where(newly, nxt, stop_tok)
+            stopped |= newly
             out.append(nxt)
-            logits = self.decode_step(nxt)
-        return np.asarray(jnp.stack(out, axis=1))
+            if stopped.all():
+                out.extend([stop_tok.copy()] * (n_new - step - 1))
+                break
+            if step + 1 < n_new:
+                logits = self.decode_step(nxt)
+        self.last_stop_mask = stopped
+        return np.stack(out, axis=1)
 
     def reuse_ratio(self) -> float:
         hits = sum(r.stats.hits for r in self.reuse)
@@ -852,20 +1137,7 @@ class KVSwapEngine:
 
     def overlap_report(self, skip: int = 1) -> dict:
         """Mean per-step modeled + measured overlap (benchmarks / serving)."""
-        steps = self.step_log[skip:] or self.step_log
-        if not steps:
-            return {}
-        n = len(steps)
-        mean = lambda f: sum(f(s) for s in steps) / n
-        return {
-            "io_seconds": mean(lambda s: s.io_seconds),
-            "compute_seconds": mean(lambda s: s.compute_seconds),
-            "pipelined_seconds": mean(lambda s: s.pipelined_seconds),
-            "overlap_saved_seconds": mean(lambda s: s.overlap_saved_seconds),
-            "wall_seconds": mean(lambda s: s.wall_seconds),
-            "io_wait_seconds": mean(lambda s: s.io_wait_seconds),
-            "h2d_bytes": mean(lambda s: s.h2d_bytes),
-        }
+        return summarize_steps(self.step_log[skip:] or self.step_log)
 
     def close(self):
         if self.prefetcher is not None:

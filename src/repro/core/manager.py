@@ -38,7 +38,9 @@ class MappingTable:
     slots: np.ndarray
     # [B, M] bool — logical group validity
     group_mask: np.ndarray
-    rolling_fill: int
+    # [B] valid rolling-buffer tokens per row (rows advance independently
+    # under continuous batching; lockstep batches keep them uniform)
+    rolling_fill: np.ndarray
     # transient staging for groups that couldn't enter the reuse buffer
     staged: dict = dataclasses.field(default_factory=dict)  # (bi, gid) -> [G,2,Hkv,d]
     # groups this fetch loaded from disk into reuse slots — the *delta* the
@@ -101,22 +103,30 @@ class KVCacheManager:
                     slots[bi, mi] = -2 if slot is None else slot
         return MappingTable(
             group_ids=ids_out, slots=slots, group_mask=np.asarray(group_mask, bool),
-            rolling_fill=self.rolling.fill, staged=staged, new_groups=new_groups,
+            rolling_fill=self.rolling.fills.copy(), staged=staged,
+            new_groups=new_groups,
         )
 
     def gather(self, table: MappingTable) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
         """Materialize the logical KV view.
 
         Returns ``(k, v, token_mask, positions)`` with
-        ``k, v: [B, M*G + fill, H_kv, d]``, ``token_mask: [B, M*G + fill]``,
-        ``positions: [B, M*G + fill]`` absolute token positions (for kernels
+        ``k, v: [B, M*G + G, H_kv, d]``, ``token_mask: [B, M*G + G]``,
+        ``positions: [B, M*G + G]`` absolute token positions (for kernels
         that need them; RoPE is already baked into cached K).
+
+        The tail region is always ``G`` wide — one full rolling buffer — with
+        per-row validity masks (``table.rolling_fill``), so the context shape
+        is fixed regardless of each row's fill level; rows at different fill
+        levels (continuous batching) share one tensor.  Attention weights on
+        masked columns underflow to exactly zero, so the extra columns never
+        change a row's output.
         """
         b, m = table.slots.shape
         g = self.reuse.group_size
         fill = table.rolling_fill
         hkv, d = self.rolling.k.shape[2], self.rolling.k.shape[3]
-        n_tok = m * g + fill
+        n_tok = m * g + g
         k = np.zeros((b, n_tok, hkv, d), dtype=self.rolling.k.dtype)
         v = np.zeros_like(k)
         mask = np.zeros((b, n_tok), dtype=bool)
@@ -135,13 +145,11 @@ class KVCacheManager:
                 mask[bi, sl] = True
                 gid = table.group_ids[bi, mi]
                 pos[bi, sl] = np.arange(gid * g, (gid + 1) * g)
-        if fill:
-            rk, rv = self.rolling.current()
-            k[:, m * g :] = rk
-            v[:, m * g :] = rv
-            mask[:, m * g :] = True
-            base = self.store.n_groups[self.layer][:, None] * g
-            pos[:, m * g :] = base + np.arange(fill)[None, :]
+        k[:, m * g :] = self.rolling.k
+        v[:, m * g :] = self.rolling.v
+        mask[:, m * g :] = np.arange(g)[None, :] < fill[:, None]
+        base = self.store.n_groups[self.layer][:, None] * g
+        pos[:, m * g :] = base + np.arange(g)[None, :]
         return k, v, mask, pos
 
     def sync_device(self, table: MappingTable) -> int:
@@ -158,21 +166,31 @@ class KVCacheManager:
             raise RuntimeError("no device mirror attached (host-gather mode?)")
         return mirror.scatter(table.new_groups)
 
-    def spill_group(self, k_group: np.ndarray, v_group: np.ndarray) -> None:
-        """Write one completed group per row to disk (device-resident flush).
+    def spill_group_row(self, batch_idx: int, k_group: np.ndarray,
+                        v_group: np.ndarray) -> None:
+        """Write one row's completed group to disk (device-resident flush).
 
-        Counterpart of :meth:`append_token` for the device path: the rolling
-        tokens lived on device, were counted by ``RollingBuffer.advance()``,
-        and are downloaded once per ``G`` steps as this ``[B, G, H_kv, d]``
-        pair.
+        Counterpart of :meth:`append_token_rows` for the device path: the
+        rolling tokens lived on device, were counted by
+        ``RollingBuffer.advance_rows()``, and are downloaded once per ``G``
+        steps as this ``[G, H_kv, d]`` pair.  Rows flush independently —
+        continuous batching admits them at different offsets.
         """
-        self.store.append_group(self.layer, k_group, v_group)
+        self.store.append_group_row(self.layer, batch_idx, k_group, v_group)
 
-    def append_token(self, k_new: np.ndarray, v_new: np.ndarray):
-        """Route one new token's KV: rolling buffer, flushing full groups to
-        disk (and reporting the flushed group for K_lr append)."""
-        flushed = self.rolling.append(k_new, v_new)
-        if flushed is not None:
-            k_g, v_g = flushed
-            self.store.append_group(self.layer, k_g, v_g)
-        return flushed
+    def append_token_rows(self, k_new: np.ndarray, v_new: np.ndarray,
+                          active: np.ndarray) -> list[tuple[int, np.ndarray, np.ndarray]]:
+        """Route one new token's KV for every active row: rolling buffer,
+        flushing each row's full group to disk as it completes.  Returns the
+        completed ``(row, k_group, v_group)`` triples for K_lr append."""
+        completed = self.rolling.append_rows(k_new, v_new, active)
+        for bi, k_g, v_g in completed:
+            self.store.append_group_row(self.layer, bi, k_g, v_g)
+        return completed
+
+    def free_row(self, batch_idx: int) -> None:
+        """Retire one row in this layer's memory regions (reuse slots and
+        rolling tail); the shared store's watermark is reset once by the
+        engine via :meth:`KVDiskStore.free_row`."""
+        self.reuse.clear_row(batch_idx)
+        self.rolling.clear_row(batch_idx)

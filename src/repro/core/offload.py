@@ -286,25 +286,71 @@ class KVDiskStore:
         self.n_groups[layer, :] = ng
         return ng
 
+    def write_prefill_row(self, layer: int, batch_idx: int, k: np.ndarray,
+                          v: np.ndarray) -> int:
+        """Row-level :meth:`write_prefill` (continuous-batching admission).
+
+        ``k, v``: ``[seq, H_kv, d]`` for one batch row.  Only full groups are
+        written; the trailing ``seq % G`` tokens stay in the rolling buffer.
+        Charged as one sequential write.
+        """
+        seq = k.shape[0]
+        g = self.group_size
+        ng = seq // g
+        if ng > self.max_groups:
+            raise RuntimeError(f"KVDiskStore overflow: layer={layer} batch={batch_idx}")
+        if ng > 0:
+            kg = k[: ng * g].reshape(ng, g, self.n_kv_heads, self.head_dim)
+            vg = v[: ng * g].reshape(ng, g, self.n_kv_heads, self.head_dim)
+            block = np.stack([kg, vg], axis=2)  # [ng, G, 2, H, d]
+            if self.quant_bits == 8:
+                qblk, scale = self._quant(block)
+                self._mm[layer, batch_idx, :ng] = qblk
+                self._scales[layer, batch_idx, :ng] = scale
+            else:
+                self._mm[layer, batch_idx, :ng] = block.astype(self.dtype)
+            if self.accountant is not None:
+                self.accountant.charge_write(ng * self.group_nbytes, 1)
+        self.n_groups[layer, batch_idx] = ng
+        return ng
+
     def append_group(self, layer: int, k_group: np.ndarray, v_group: np.ndarray) -> None:
         """Append one full group per batch row (rolling-buffer flush).
 
         ``k_group, v_group``: ``[batch, G, H_kv, d]``.
         """
         for bi in range(self.batch):
-            gi = int(self.n_groups[layer, bi])
-            if gi >= self.max_groups:
-                raise RuntimeError(f"KVDiskStore overflow: layer={layer} batch={bi}")
-            block = np.stack([k_group[bi], v_group[bi]], axis=1)  # [G, 2, H, d]
-            if self.quant_bits == 8:
-                qblk, scale = self._quant(block)
-                self._mm[layer, bi, gi] = qblk
-                self._scales[layer, bi, gi] = scale
-            else:
-                self._mm[layer, bi, gi] = block.astype(self.dtype)
-            self.n_groups[layer, bi] = gi + 1
+            self.append_group_row(layer, bi, k_group[bi], v_group[bi])
+
+    def append_group_row(self, layer: int, batch_idx: int, k_group: np.ndarray,
+                         v_group: np.ndarray) -> None:
+        """Append one full group for a single row (``[G, H_kv, d]`` each).
+
+        The continuous-batching flush unit: rows retire/flush independently,
+        so each completed group is one write request for one row.
+        """
+        gi = int(self.n_groups[layer, batch_idx])
+        if gi >= self.max_groups:
+            raise RuntimeError(f"KVDiskStore overflow: layer={layer} batch={batch_idx}")
+        block = np.stack([k_group, v_group], axis=1)  # [G, 2, H, d]
+        if self.quant_bits == 8:
+            qblk, scale = self._quant(block)
+            self._mm[layer, batch_idx, gi] = qblk
+            self._scales[layer, batch_idx, gi] = scale
+        else:
+            self._mm[layer, batch_idx, gi] = block.astype(self.dtype)
+        self.n_groups[layer, batch_idx] = gi + 1
         if self.accountant is not None:
-            self.accountant.charge_write(self.batch * self.group_nbytes, self.batch)
+            self.accountant.charge_write(self.group_nbytes, 1)
+
+    def free_row(self, batch_idx: int) -> None:
+        """Retire a batch row: its extents become reusable by the next tenant.
+
+        The layout is a fixed ``(layer, row, group)``-indexed memmap, so
+        "freeing" is resetting the valid-group watermark — the recycled
+        slot's writes then overwrite the old extents in place.
+        """
+        self.n_groups[:, batch_idx] = 0
 
     # -- reads ------------------------------------------------------------
     def read_run(self, layer: int, batch_idx: int, start: int, count: int) -> tuple[np.ndarray, np.ndarray]:

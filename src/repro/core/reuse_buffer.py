@@ -245,6 +245,20 @@ class ReuseBuffer:
         self.slots[batch_idx, slot] = kv_group
         return slot
 
+    def clear_row(self, batch_idx: int) -> None:
+        """Retire a batch row: drop every resident group so the next tenant
+        of the slot starts cold (its first fetch misses on everything and
+        reads only its own groups — the slot-recycling contract).
+
+        Slot *data* is left in place: with the row's slot table empty no
+        mapping table can reference it, and the device mirror (if attached)
+        is likewise unreachable until fresh inserts scatter over it.
+        """
+        self._index[batch_idx].clear()
+        self._fifo[batch_idx].clear()
+        self._free[batch_idx] = list(range(self.capacity - 1, -1, -1))
+        self.slot_table[batch_idx, :] = -1
+
     def invalidate(self, batch_idx: int, group_id: int) -> None:
         """Drop a group (e.g. its on-disk contents were superseded)."""
         idx = self._index[batch_idx]

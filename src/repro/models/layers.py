@@ -202,7 +202,8 @@ def decode_attention(q: jax.Array, k_ctx: jax.Array, v_ctx: jax.Array,
 
 @jax.jit
 def gather_slots(dev_k: jax.Array, dev_v: jax.Array, slots: jax.Array,
-                 tail_k: tuple, tail_v: tuple) -> tuple[jax.Array, jax.Array, jax.Array]:
+                 tail_k: jax.Array, tail_v: jax.Array,
+                 tail_fill: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Assemble the decode context from persistent device buffers.
 
     The device-resident analogue of ``KVCacheManager.gather``: instead of a
@@ -214,13 +215,14 @@ def gather_slots(dev_k: jax.Array, dev_v: jax.Array, slots: jax.Array,
     group is resident, ``-1`` where the selection mask is off (clamped for
     the gather, turned into the token mask here — no separate mask upload),
     ``-2`` for transiently staged groups (gathered wrong on purpose; the
-    caller overrides those rows).  ``tail_k/tail_v`` are tuples of the last
-    ``fill`` decoded tokens' ``[B, H_kv, d]`` — still on device from
-    ``decode_block``, never round-tripped; the tuple length is part of the
-    jit cache key, so each fill level compiles once (same as the host path's
-    context-shape variants).
+    caller overrides those rows).  ``tail_k/tail_v [B, G, H_kv, d]`` is the
+    device rolling mirror — the most recent ``< G`` decoded tokens per row,
+    written in place by the engine, never round-tripped — and ``tail_fill
+    [B]`` its per-row valid count: under continuous batching rows sit at
+    different fill levels, so validity is a data-dependent mask rather than
+    a shape, and the context compiles once for all fill levels.
 
-    Returns ``(k_ctx, v_ctx, token_mask)`` with ``k_ctx [B, M·G + fill,
+    Returns ``(k_ctx, v_ctx, token_mask)`` with ``k_ctx [B, M·G + G,
     H_kv, d]`` — the exact shape/dtype/values the host-gather path feeds
     ``decode_block``, except that slots the mask disables hold stale (finite)
     data rather than zeros; masked attention weights underflow to exactly 0
@@ -234,13 +236,10 @@ def gather_slots(dev_k: jax.Array, dev_v: jax.Array, slots: jax.Array,
     k_ctx = k_sel.reshape(b, m * g, *dev_k.shape[3:])
     v_ctx = v_sel.reshape(b, m * g, *dev_v.shape[3:])
     tok_mask = jnp.repeat(slots != -1, g, axis=1)                 # [B, M·G]
-    if tail_k:
-        tk = jnp.stack(tail_k, axis=1).astype(dev_k.dtype)        # [B,fill,Hk,d]
-        tv = jnp.stack(tail_v, axis=1).astype(dev_v.dtype)
-        k_ctx = jnp.concatenate([k_ctx, tk], axis=1)
-        v_ctx = jnp.concatenate([v_ctx, tv], axis=1)
-        tok_mask = jnp.concatenate(
-            [tok_mask, jnp.ones((b, len(tail_k)), bool)], axis=1)
+    k_ctx = jnp.concatenate([k_ctx, tail_k.astype(dev_k.dtype)], axis=1)
+    v_ctx = jnp.concatenate([v_ctx, tail_v.astype(dev_v.dtype)], axis=1)
+    tail_mask = jnp.arange(g)[None, :] < tail_fill[:, None]       # [B, G]
+    tok_mask = jnp.concatenate([tok_mask, tail_mask], axis=1)
     return k_ctx, v_ctx, tok_mask
 
 

@@ -330,18 +330,20 @@ class TransformerAdapter:
         return _act_constrain(x + y), k, v
 
     # -- decode ------------------------------------------------------------
-    def gather_context(self, dev_k, dev_v, slots, tail_k, tail_v):
+    def gather_context(self, dev_k, dev_v, slots, tail_k, tail_v, tail_fill):
         """Device-resident context assembly (engine ``device_resident=True``).
 
         Gathers the step's working set out of the persistent device reuse
-        mirror by slot permutation plus the device rolling tail — no host
-        concat, no full re-upload — and returns the same ``(k_ctx, v_ctx,
-        ctx_mask)`` triple :meth:`decode_block` consumes, so the decode
-        compute is the *identical* compiled function in both engine paths
-        (the bit-identity contract).  An adapter without this method makes
-        the engine fall back to host gather.
+        mirror by slot permutation plus the device rolling tail (``tail_k/
+        tail_v [B, G, H_kv, d]`` with per-row valid counts ``tail_fill
+        [B]`` — rows advance independently under continuous batching) — no
+        host concat, no full re-upload — and returns the same ``(k_ctx,
+        v_ctx, ctx_mask)`` triple :meth:`decode_block` consumes, so the
+        decode compute is the *identical* compiled function in both engine
+        paths (the bit-identity contract).  An adapter without this method
+        makes the engine fall back to host gather.
         """
-        return L.gather_slots(dev_k, dev_v, slots, tuple(tail_k), tuple(tail_v))
+        return L.gather_slots(dev_k, dev_v, slots, tail_k, tail_v, tail_fill)
 
     @functools.partial(jax.jit, static_argnames=("self", "layer"))
     def decode_block(self, params, layer, x, positions, k_ctx, v_ctx, ctx_mask):

@@ -1,7 +1,10 @@
+from repro.serving.api import Request, ServeSession
 from repro.serving.decode import (KVSwapServeConfig, attach_kvswap_adapters,
                                   flush_rolling, init_cache, prefill,
                                   serve_step)
-from repro.serving.scheduler import BatchServer, Request
+from repro.serving.sampling import SamplingParams, make_row_sampler
+from repro.serving.scheduler import BatchServer
 
 __all__ = ["KVSwapServeConfig", "attach_kvswap_adapters", "flush_rolling",
-           "init_cache", "prefill", "serve_step", "BatchServer", "Request"]
+           "init_cache", "prefill", "serve_step", "BatchServer", "Request",
+           "ServeSession", "SamplingParams", "make_row_sampler"]

@@ -1,0 +1,286 @@
+"""Continuous-batching serving API: persistent engine, per-slot lifecycle.
+
+The paper's deployment scenario is batched on-device serving (Tab. 4, batch
+1-16); serving-as-a-service systems for this setting (LLMS, LMCache) treat
+the engine as a **long-lived resource** with per-request admission and KV
+lifecycle.  This module is that front end for the KVSwap runtime:
+
+* one :class:`~repro.core.engine.KVSwapEngine` lives for the whole
+  :class:`ServeSession` — no per-batch construction/teardown, and the
+  prefix cache, reuse buffers, device mirrors and jit caches all stay warm;
+* each engine batch row is a **slot** with its own request lifecycle::
+
+      FREE --admit_row()--> RUNNING --stop/max_new--> (publish) --retire_row()--> FREE
+                               |
+                               +--> decoding: active-mask on, reads charged
+                               '--> masked:  inactive, zero reads, zero time
+
+* :meth:`ServeSession.step` is one scheduler iteration: admit due requests
+  into free slots, sample one token per running slot, retire finished
+  slots (publishing their served KV to the prefix cache first), and run one
+  engine decode step over the remaining active rows.
+
+Time is **modeled** (the DiskSpec/ComputeSpec accountants): the session
+clock advances by each admission's modeled prefill seconds and each decode
+step's pipelined seconds, and requests carry an ``arrival`` timestamp on
+that clock — which is what lets a benchmark drive a Poisson arrival trace
+deterministically (``benchmarks/continuous_serving.py``).
+
+Determinism contract: a request's token stream depends only on its own
+prompt and sampling state — never on which slot it lands in, who shares the
+batch, or when it was admitted.  For identical arrival patterns the session
+emits tokens bit-identical to the static lockstep path
+(``tests/test_serving_api.py`` asserts this across ``device_resident`` ×
+``async_io``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Callable, Iterator, Sequence
+
+import numpy as np
+
+from repro.core.engine import EngineConfig, KVSwapEngine, summarize_steps
+from repro.serving.sampling import SamplingParams, make_row_sampler
+
+WAITING, RUNNING, DONE = "waiting", "running", "done"
+
+
+@dataclasses.dataclass
+class Request:
+    """One serving request and its full lifecycle record."""
+
+    rid: int
+    prompt: np.ndarray                  # [S] int
+    max_new: int
+    stop_ids: tuple = ()
+    sampling: SamplingParams | None = None
+    arrival: float = 0.0                # modeled seconds on the session clock
+    # raw ``logits [1, V] -> ids [1]`` override (BatchServer compatibility);
+    # prefer ``sampling`` for new code
+    sampler: Callable | None = dataclasses.field(default=None, repr=False)
+    # filled in by the session
+    output: np.ndarray | None = None    # [<= max_new] generated ids
+    stopped_early: bool = False         # hit a stop token before max_new
+    state: str = WAITING
+    slot: int | None = None
+    admitted_at: float | None = None    # session clock at admission
+    finished_at: float | None = None
+    cached_tokens: int = 0              # prompt tokens restored from the cache
+
+
+class _Slot:
+    """Runtime state of one engine row while a request occupies it."""
+
+    def __init__(self, req: Request, sampler: Callable, logits: np.ndarray):
+        self.req = req
+        self.sampler = sampler
+        self.logits = logits            # [1, V] current next-token logits
+        self.out: list[int] = []
+        self.stop_set = frozenset(int(t) for t in req.stop_ids)
+
+
+class ServeSession:
+    """Persistent continuous-batching session over one KVSwap engine.
+
+    ``slots`` engine rows serve an unbounded request stream: ``submit()``
+    enqueues, ``step()`` runs one admission+decode iteration, ``stream()``
+    iterates steps yielding events, ``drain()`` runs to completion.  With a
+    :class:`~repro.cache.PrefixCache` attached, admissions restore cached
+    prefixes and retirements publish served KV back — the cache handle (and
+    everything else) outlives every request.
+    """
+
+    def __init__(self, model, params, engine_cfg: EngineConfig, *,
+                 slots: int, calib_k: np.ndarray | None = None,
+                 adapter=None, prefix_cache=None):
+        kinds = getattr(model, "layer_kinds", ("kv",) * model.n_layers)
+        if any(k != "kv" for k in kinds):
+            raise ValueError(
+                "ServeSession requires attention-only models: recurrent "
+                "state layers have no per-row admission/retirement")
+        self.engine = KVSwapEngine(model, params, engine_cfg, batch=slots,
+                                   calib_k=calib_k, adapter=adapter)
+        self.n_slots = slots
+        self.prefix_cache = prefix_cache
+        self.now = 0.0                  # modeled seconds
+        self.published_blocks = 0
+        self.completed: dict[int, Request] = {}
+        self._rid = itertools.count()
+        self._waiting: list[Request] = []
+        self._slots: list[_Slot | None] = [None] * slots
+
+    # -- submission ------------------------------------------------------
+    def submit(self, prompt: np.ndarray, max_new: int, *,
+               stop_ids: Sequence[int] = (),
+               sampling: SamplingParams | None = None,
+               sampler: Callable | None = None,
+               arrival: float | None = None) -> int:
+        """Enqueue a request; returns its id.  ``arrival`` (modeled seconds)
+        defaults to "already here"; future arrivals wait on the clock.
+        ``sampler`` overrides ``sampling`` with a raw ``logits -> ids``
+        callable (BatchServer compatibility)."""
+        if max_new < 1:
+            raise ValueError("max_new must be >= 1")
+        n_prompt = int(np.asarray(prompt).reshape(-1).shape[0])
+        if n_prompt < 1:
+            raise ValueError("empty prompt")
+        cap = self.engine.cap_tokens
+        if n_prompt + max_new > cap:
+            # reject at the front door: admitted-then-overflowing would crash
+            # decode_step mid-flight and take the whole batch down with it
+            raise ValueError(
+                f"prompt ({n_prompt}) + max_new ({max_new}) exceeds the "
+                f"engine's KV capacity ({cap} tokens); raise cfg.max_seq")
+        req = Request(rid=next(self._rid),
+                      prompt=np.asarray(prompt).reshape(-1).astype(np.int64),
+                      max_new=int(max_new), stop_ids=tuple(stop_ids),
+                      sampling=sampling, sampler=sampler,
+                      arrival=float(self.now if arrival is None else arrival))
+        self._waiting.append(req)
+        return req.rid
+
+    # -- scheduling internals --------------------------------------------
+    def _active(self) -> list[int]:
+        return [i for i, s in enumerate(self._slots) if s is not None]
+
+    def _admit_due(self, events: list) -> None:
+        """Fill free slots with due requests, FIFO by (arrival, rid)."""
+        self._waiting.sort(key=lambda r: (r.arrival, r.rid))
+        for i in range(self.n_slots):
+            if self._slots[i] is not None:
+                continue
+            due = next((r for r in self._waiting if r.arrival <= self.now), None)
+            if due is None:
+                break
+            # dequeue only after the admission succeeds, so an admission
+            # failure leaves the request visible instead of losing it
+            logits = self.engine.admit_row(i, due.prompt, self.prefix_cache)
+            self._waiting.remove(due)
+            rep = self.engine.prefill_report
+            self.now += rep["modeled_seconds"]
+            due.state, due.slot, due.admitted_at = RUNNING, i, self.now
+            due.cached_tokens = rep["cached_tokens"]
+            sampler = due.sampler or make_row_sampler(due.sampling)
+            self._slots[i] = _Slot(due, sampler,
+                                   np.asarray(logits)[None, :])
+            events.append({"type": "admit", "rid": due.rid, "slot": i,
+                           "t": self.now, "cached_tokens": due.cached_tokens})
+
+    def _finish(self, i: int, events: list) -> None:
+        slot = self._slots[i]
+        req = slot.req
+        if self.prefix_cache is not None:
+            # publish BEFORE retirement frees the row's disk extents; the
+            # engine clamps the history to what is actually on disk
+            history = np.concatenate(
+                [req.prompt, np.asarray(slot.out, np.int64)])
+            # manifest save is deferred to drain()/close(): one rewrite per
+            # drain, not one per retirement
+            self.published_blocks += self.engine.publish(
+                self.prefix_cache, tokens={i: history}, rows=[i], save=False)
+        self.engine.retire_row(i)
+        req.output = np.asarray(slot.out, np.int64)
+        req.state, req.finished_at, req.slot = DONE, self.now, None
+        self.completed[req.rid] = req
+        self._slots[i] = None
+        events.append({"type": "finish", "rid": req.rid, "slot": i,
+                       "t": self.now, "tokens": len(slot.out),
+                       "stopped_early": req.stopped_early})
+
+    # -- the scheduler iteration -----------------------------------------
+    def step(self) -> list[dict]:
+        """One continuous-batching iteration; returns this step's events.
+
+        Admit → sample → retire → decode: every running slot samples one
+        token from its current logits; slots that hit a stop token or their
+        ``max_new`` budget retire *before* the decode step, so a finished
+        request never burns another disk read (the static batcher's
+        decode-to-batch-max waste).  Freed slots are refilled in the same
+        iteration when due requests are waiting.
+        """
+        events: list[dict] = []
+        if not self._active() and self._waiting:
+            # idle engine: jump the clock to the next arrival
+            self.now = max(self.now, min(r.arrival for r in self._waiting))
+        self._admit_due(events)
+        if not self._active():
+            return events
+        toks = np.zeros(self.n_slots, dtype=np.int64)
+        for i in self._active():
+            slot = self._slots[i]
+            tok = int(np.asarray(slot.sampler(slot.logits)).reshape(-1)[0])
+            slot.out.append(tok)
+            events.append({"type": "token", "rid": slot.req.rid, "slot": i,
+                           "token": tok})
+            if tok in slot.stop_set:
+                slot.req.stopped_early = True
+                self._finish(i, events)
+            elif len(slot.out) >= slot.req.max_new:
+                self._finish(i, events)
+            else:
+                toks[i] = tok
+        # slots freed above are refilled at the NEXT step's admission phase:
+        # a request admitted now would join this decode step without having
+        # sampled its first token (its logits come from the admission
+        # prefill, which the sampling loop above has already passed)
+        active = self._active()
+        if active:
+            logits = np.asarray(self.engine.decode_step(toks))
+            self.now += self.engine.step_log[-1].pipelined_seconds
+            for i in active:
+                self._slots[i].logits = logits[i:i + 1]
+        return events
+
+    def stream(self) -> Iterator[dict]:
+        """Iterate scheduler steps until the session is idle, yielding
+        admit/token/finish events as they happen."""
+        while self._waiting or self._active():
+            yield from self.step()
+
+    def drain(self) -> dict[int, Request]:
+        """Run to completion; returns every completed request by id."""
+        for _ in self.stream():
+            pass
+        if self.prefix_cache is not None:
+            self.prefix_cache.save()
+        return self.completed
+
+    def result(self, rid: int) -> np.ndarray:
+        return self.completed[rid].output
+
+    # -- accounting -------------------------------------------------------
+    def stats(self) -> dict:
+        """Session-cumulative serving stats (goodput = completed-request
+        tokens per modeled second — the benchmark's headline metric)."""
+        done = list(self.completed.values())
+        tokens = sum(len(r.output) for r in done)
+        eng = self.engine
+        snap = eng.accountant.snapshot()
+        return {
+            "completed_requests": len(done),
+            "completed_tokens": tokens,
+            "stopped_early": sum(r.stopped_early for r in done),
+            "modeled_seconds": self.now,
+            "goodput_tokens_per_s": tokens / self.now if self.now else 0.0,
+            "waiting": len(self._waiting),
+            "running": len(self._active()),
+            "reuse_ratio": eng.reuse_ratio(),
+            "read_bytes": snap["read_bytes"],
+            "decode_steps": len(eng.step_log),
+            **eng.overlap_report(),
+        }
+
+    # -- lifecycle --------------------------------------------------------
+    def close(self) -> None:
+        if self.prefix_cache is not None and self.published_blocks:
+            self.prefix_cache.save()   # publishes defer their manifest write
+        self.engine.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

@@ -1,13 +1,19 @@
 """Samplers for the serving loop: greedy, temperature, top-k, top-p.
 
-Pure-JAX, jittable; the BatchServer takes any ``sampler(logits) -> tokens``.
-``device=True`` variants keep the drawn tokens on device so a tight decode
-loop (``KVSwapEngine.generate``) never bounces logits through numpy per
-token — the only host transfer is the final stack of generated ids.
+Pure-JAX, jittable.  :class:`SamplingParams` + :func:`make_row_sampler` are
+the single entry point every serving path routes through: the continuous
+:class:`~repro.serving.api.ServeSession` builds one sampler per admitted
+request (per-row temperature / top-k / top-p / seed), and the static
+:class:`~repro.serving.scheduler.BatchServer` compatibility wrapper rides
+the same machinery.  ``device=True`` variants keep the drawn tokens on
+device so a tight decode loop (``KVSwapEngine.generate``) never bounces
+logits through numpy per token — the only host transfer is the final stack
+of generated ids.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import jax
@@ -15,6 +21,38 @@ import jax.numpy as jnp
 import numpy as np
 
 _argmax = jax.jit(lambda lg: jnp.argmax(lg, axis=-1))
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling knobs (``temperature == 0`` ⇒ greedy).
+
+    One request = one :class:`SamplingParams`; a continuous batch mixes
+    greedy and stochastic rows freely because each slot samples its own
+    logits row through its own sampler.
+    """
+
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 0.0
+    seed: int = 0
+
+    @property
+    def is_greedy(self) -> bool:
+        return self.temperature == 0.0
+
+
+def make_row_sampler(params: SamplingParams | None = None):
+    """The unified sampler factory: ``sampler(logits [n, V]) -> tokens [n]``.
+
+    Greedy for ``None`` / zero temperature (one jitted argmax, no RNG
+    state); otherwise a stateful categorical sampler with the requested
+    temperature / top-k / top-p and its own auto-splitting key.
+    """
+    if params is None or params.is_greedy:
+        return greedy
+    return make_sampler(temperature=params.temperature, top_k=params.top_k,
+                        top_p=params.top_p, seed=params.seed)
 
 
 def greedy(logits) -> np.ndarray:

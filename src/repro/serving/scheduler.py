@@ -1,161 +1,155 @@
-"""Batched request scheduler over the KVSwap engine.
+"""Static-batch compatibility front end over the continuous serving API.
 
-The paper's deployment scenario is batched on-device serving (Tab. 4 sweeps
-batch 1-16).  This scheduler gives the engine a request-queue front end:
+Historically this module owned the static batcher: ``flush()`` constructed a
+fresh engine per batch, padded short batches with clone rows (burning real
+disk reads) and decoded every request to the batch-max ``max_new`` before
+truncating.  The serving API redesign moved the real machinery into
+:class:`repro.serving.api.ServeSession` — a **persistent** engine with
+per-slot admission/retirement — and :class:`BatchServer` survives as a thin
+wrapper that keeps the old surface (``submit``/``flush``/``result``/
+``last_stats``) for existing callers, benchmarks and examples:
 
-* requests accumulate until ``batch`` are ready (or ``flush()`` is called),
-* prompts are left-padded to a common length (padding tokens masked out of
-  the KV store by prefix truncation — we simply prefill from the longest
-  common start; simpler and faithful to the fixed-batch engine),
-* one engine instance serves the batch to each request's ``max_new``.
+* one engine lives across flushes (jit caches, reuse buffers and the prefix
+  cache all stay warm),
+* short batches admit only **real** rows — empty slots are masked, issue no
+  disk reads, and ``last_stats["padded_requests"]`` counts them with zero
+  IO charged (no more clone-row waste),
+* each request decodes exactly to its own ``max_new`` / stop token; nobody
+  rides to the batch max.
 
-With ``engine_cfg.async_io=True`` the batch decodes through the engine's
-background prefetch pipeline (``repro.io``): group reads for layer *i+1*
-are issued as soon as layer *i*'s prediction scores exist, so the batch's
-disk time hides under compute.  Tokens are bit-identical either way;
-``last_stats`` reports the modeled and measured overlap per flush.
+``last_stats`` keeps its historical keys (throughput, overlap, prefill and
+prefix-cache sections), computed over the flush's window of the persistent
+engine's step log.
 
-With a :class:`repro.cache.PrefixCache` attached the server is
-**session-aware**: the cache handle outlives each flush's engine, prompt
-(and generated) KV is published at end of request, and later flushes that
-share a prefix — the system prompt, the head of a multi-turn conversation —
-restore it from disk instead of recomputing it (``prefill_cached``).
-``last_stats["prefix_cache"]`` reports the hit rate and saved prefill
-tokens per flush.
-
-Greedy sampling by default; plug a ``sampler(logits) -> token_ids`` for
-temperature/top-k.
+New code should use :class:`~repro.serving.api.ServeSession` directly —
+see ``docs/architecture.md`` ("Serving API").
 """
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Callable
 
 import numpy as np
 
 from repro.cache import PrefixCache
-from repro.core.engine import EngineConfig, KVSwapEngine
+from repro.core.engine import EngineConfig, summarize_steps
+from repro.serving.api import Request, ServeSession
+from repro.serving.sampling import greedy
+
+__all__ = ["BatchServer", "Request", "greedy_sampler"]
+
+# the one sampling entry point (repro.serving.sampling); kept under the old
+# name for callers that imported it from here
+greedy_sampler = greedy
 
 
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray          # [S] int32
-    max_new: int
-    output: np.ndarray | None = None
-
-
-def greedy_sampler(logits) -> np.ndarray:
-    import jax.numpy as jnp
-    return np.asarray(jnp.argmax(logits, axis=-1))
+def _aggregate_admissions(reports: list[dict]) -> dict:
+    """Sum the per-admission prefill reports of one flush window."""
+    keys = ("prompt_tokens", "cached_tokens", "computed_tokens",
+            "restore_seconds", "write_seconds", "compute_seconds",
+            "modeled_seconds", "modeled_cold_seconds", "wall_seconds")
+    return {k: sum(r[k] for r in reports) for k in keys}
 
 
 class BatchServer:
-    """Static batcher: collects ``batch`` requests, serves them together."""
+    """Static batcher facade: collects ``batch`` requests, serves them
+    together through a persistent :class:`ServeSession`."""
 
     def __init__(self, model_adapter, params, engine_cfg: EngineConfig, *,
                  batch: int, calib_k: np.ndarray,
-                 sampler: Callable = greedy_sampler,
+                 sampler: Callable | None = None,
                  prefix_cache: PrefixCache | None = None):
-        self.model = model_adapter
-        self.params = params
         self.cfg = engine_cfg
         self.batch = batch
-        self.calib_k = calib_k
+        # legacy samplers take a whole logits block; the session applies
+        # them per row ([1, V] slices), which every historical sampler
+        # (greedy, make_sampler) already handled
         self.sampler = sampler
-        # persists across flushes (and, with PrefixCacheConfig.dir, across
-        # processes): each flush's engine restores matched prefixes from it
-        # and publishes its served tokens back at end of request
         self.prefix_cache = prefix_cache
-        self._queue: list[Request] = []
+        self.session = ServeSession(model_adapter, params, engine_cfg,
+                                    slots=batch, calib_k=calib_k,
+                                    prefix_cache=prefix_cache)
+        self._queue: list[tuple[int, np.ndarray, int]] = []
+        self._rid_map: dict[int, int] = {}   # public rid -> session rid
         self._next_id = 0
         self.completed: dict[int, Request] = {}
+        self.last_stats: dict = {}
 
     def submit(self, prompt: np.ndarray, max_new: int) -> int:
         rid = self._next_id
         self._next_id += 1
-        self._queue.append(Request(rid, np.asarray(prompt, np.int32), max_new))
+        self._queue.append((rid, np.asarray(prompt, np.int64), max_new))
         if len(self._queue) >= self.batch:
             self.flush()
         return rid
 
     def flush(self) -> None:
-        """Serve everything queued (pads the batch with clones if short)."""
+        """Serve everything queued (up to ``batch``); empty slots stay
+        masked instead of decoding clone rows."""
         if not self._queue:
             return
-        reqs = self._queue[: self.batch]
-        self._queue = self._queue[self.batch:]
-        real = len(reqs)
-        while len(reqs) < self.batch:           # pad with a clone (discarded)
-            pad = Request(-1, reqs[0].prompt, reqs[0].max_new)
-            reqs.append(pad)
+        todo, self._queue = self._queue[: self.batch], self._queue[self.batch:]
+        real = len(todo)
+        eng = self.session.engine
+        step_mark = len(eng.step_log)
+        admit_mark = len(eng.admit_log)
+        pub_mark = self.session.published_blocks
+        for rid, prompt, max_new in todo:
+            self._rid_map[rid] = self.session.submit(
+                prompt, max_new, sampler=self.sampler)
+        results = self.session.drain()
+        for rid, _, _ in todo:
+            req = results[self._rid_map[rid]]
+            self.completed[rid] = req
 
-        # left-align prompts to the shortest; the tail tokens of longer
-        # prompts are decoded so every request sees its full prompt
-        min_len = min(len(r.prompt) for r in reqs)
-        prompts = np.stack([r.prompt[:min_len] for r in reqs])
-        tails = [r.prompt[min_len:] for r in reqs]
-        max_tail = max((len(t) for t in tails), default=0)
-        n_new = max(r.max_new for r in reqs)
-
-        with KVSwapEngine(self.model, self.params, self.cfg,
-                          batch=self.batch, calib_k=self.calib_k) as eng:
-            if self.prefix_cache is not None:
-                logits = eng.prefill_cached(prompts, self.prefix_cache)
-            else:
-                logits = eng.prefill(prompts)
-            outs: list[list[int]] = [[] for _ in reqs]
-            fed: list[list[int]] = [[] for _ in reqs]   # served history past the prefill
-            # feed remaining prompt tails (teacher-forced), then decode
-            for step in range(max_tail + n_new):
-                if step < max_tail:
-                    nxt = np.array([
-                        t[step] if step < len(t) else self.sampler(logits[i:i + 1])[0]
-                        for i, t in enumerate(tails)], dtype=np.int64)
-                else:
-                    nxt = self.sampler(logits)
-                    for i in range(self.batch):
-                        outs[i].append(int(nxt[i]))
-                for i in range(self.batch):
-                    fed[i].append(int(nxt[i]))
-                logits = eng.decode_step(nxt)
-            # pad rows are clones of request 0: real_requests and the
-            # throughput figure count served requests only
-            tput_row = eng.simulated_throughput() / self.batch
-            stats = {"reuse_ratio": eng.reuse_ratio(),
-                     "throughput": real * tput_row,
-                     "batch_throughput": self.batch * tput_row,
-                     "real_requests": real,
-                     "padded_requests": self.batch - real,
-                     "async_io": self.cfg.async_io,
-                     "prefill": dict(eng.prefill_report),
-                     **eng.overlap_report()}
-            if self.prefix_cache is not None:
-                rep = eng.prefill_report
-                # publish each real request's full served tokens (prompt +
-                # fed history) so follow-up turns hit the whole conversation
-                history = [np.concatenate([prompts[i],
-                                           np.asarray(fed[i], np.int64)])
-                           for i in range(real)]
-                published = eng.publish(self.prefix_cache, tokens=history,
-                                        rows=range(real))
-                stats["prefix_cache"] = {
-                    "hit_rate": rep["cached_tokens"] / max(rep["prompt_tokens"], 1),
-                    "saved_prefill_tokens": real * rep["cached_tokens"],
-                    "published_blocks": published,
-                    "resident_blocks": self.prefix_cache.resident_blocks(),
-                    "resident_bytes": self.prefix_cache.resident_bytes(),
-                    "session_hit_rate": self.prefix_cache.stats.hit_rate,
-                    "modeled_prefill_speedup": (
-                        rep["modeled_cold_seconds"] / rep["modeled_seconds"]
-                        if rep["modeled_seconds"] else 1.0),
-                }
-
-        for i, r in enumerate(reqs[:real]):
-            r.output = np.asarray(outs[i][: r.max_new], np.int32)
-            self.completed[r.rid] = r
+        window = eng.step_log[step_mark:]
+        rep = _aggregate_admissions(eng.admit_log[admit_mark:])
+        steady = window[1:] or window
+        mean_t = (sum(s.pipelined_seconds for s in steady) / len(steady)
+                  if steady else 0.0)
+        rate = 1.0 / mean_t if mean_t > 0 else 0.0   # per-slot tokens/s
+        # a flush of max_new=1 requests runs zero decode steps (the single
+        # token comes from the admission logits); keep the overlap keys
+        # present with zeros so consumers never KeyError
+        overlap = summarize_steps(steady) or {
+            k: 0.0 for k in ("io_seconds", "compute_seconds",
+                             "pipelined_seconds", "overlap_saved_seconds",
+                             "wall_seconds", "io_wait_seconds", "h2d_bytes",
+                             "active_rows")}
+        stats = {
+            "reuse_ratio": eng.reuse_ratio(),
+            "throughput": real * rate,
+            "batch_throughput": self.batch * rate,
+            "real_requests": real,
+            # empty slots are masked rows: zero groups selected, zero disk
+            # reads, zero modeled time — not clone decodes
+            "padded_requests": self.batch - real,
+            "async_io": self.cfg.async_io,
+            "prefill": rep,
+            **overlap,
+        }
+        if self.prefix_cache is not None:
+            stats["prefix_cache"] = {
+                "hit_rate": rep["cached_tokens"] / max(rep["prompt_tokens"], 1),
+                "saved_prefill_tokens": rep["cached_tokens"],
+                "published_blocks": self.session.published_blocks - pub_mark,
+                "resident_blocks": self.prefix_cache.resident_blocks(),
+                "resident_bytes": self.prefix_cache.resident_bytes(),
+                "session_hit_rate": self.prefix_cache.stats.hit_rate,
+                "modeled_prefill_speedup": (
+                    rep["modeled_cold_seconds"] / rep["modeled_seconds"]
+                    if rep["modeled_seconds"] else 1.0),
+            }
         self.last_stats = stats
 
     def result(self, rid: int) -> np.ndarray:
-        return self.completed[rid].output
+        return np.asarray(self.completed[rid].output, np.int32)
+
+    def close(self) -> None:
+        self.session.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

@@ -1,0 +1,436 @@
+"""Continuous-batching serving API: lockstep equivalence, slot recycling,
+stop tokens, empty-slot masking, sampler unification."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.engine import EngineConfig, KVSwapEngine
+from repro.serving.api import ServeSession
+from repro.serving.sampling import SamplingParams
+
+
+def make_cfg(**kw):
+    base = dict(group_size=4, n_select=6, rank=8, reuse_capacity=12,
+                max_seq=128)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def setup(tiny_cfg, tiny_params, tiny_adapter, rng):
+    calib = rng.standard_normal(
+        (256, tiny_cfg.n_kv_heads, tiny_cfg.head_dim)).astype(np.float32)
+    return tiny_cfg, tiny_params, tiny_adapter, calib
+
+
+def session(adapter, params, calib, ecfg, slots=2, **kw):
+    return ServeSession(adapter, params, ecfg, slots=slots, calib_k=calib, **kw)
+
+
+class ReadLog:
+    """Transfer-counting shim (the test_hotpath pattern): wraps every
+    manager's fetch-path reads to record (layer, row, start, count)."""
+
+    def __init__(self, eng: KVSwapEngine):
+        self.calls: list[tuple[int, int, int, int]] = []
+        orig = eng.store.read_run
+
+        def spy(layer, batch_idx, start, count, _o=orig):
+            self.calls.append((layer, int(batch_idx), int(start), int(count)))
+            return _o(layer, batch_idx, start, count)
+
+        eng.store.read_run = spy
+
+    def rows(self):
+        return {bi for _, bi, _, _ in self.calls}
+
+    def clear(self):
+        self.calls.clear()
+
+
+class TestLockstepEquivalence:
+    """Acceptance: identical arrival patterns ⇒ tokens bit-identical to the
+    static lockstep path, across device_resident × async_io."""
+
+    @pytest.mark.parametrize("device_resident", [False, True])
+    @pytest.mark.parametrize("async_io", [False, True])
+    def test_session_matches_static_engine(self, setup, device_resident,
+                                           async_io, rng):
+        cfg, params, adapter, calib = setup
+        ecfg = make_cfg(device_resident=device_resident, async_io=async_io)
+        prompts = rng.integers(0, cfg.vocab_size, (2, 24)).astype(np.int32)
+        with KVSwapEngine(adapter, params, ecfg, batch=2, calib_k=calib) as eng:
+            ref = eng.generate(prompts, 6)
+        with session(adapter, params, calib, ecfg) as sess:
+            rids = [sess.submit(prompts[i], 6) for i in range(2)]
+            done = sess.drain()
+            got = np.stack([done[r].output for r in rids])
+        np.testing.assert_array_equal(got, ref)
+
+    @pytest.mark.parametrize("device_resident", [False, True])
+    def test_staggered_admission_matches_solo(self, setup, device_resident,
+                                              rng):
+        """A request's tokens do not depend on when it was admitted or on
+        who shares the batch (the per-row independence contract)."""
+        cfg, params, adapter, calib = setup
+        ecfg = make_cfg(device_resident=device_resident)
+        prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+                   for n in (23, 17, 30)]
+        news = [6, 4, 5]
+        # solo references: each request alone in a 1-slot session
+        refs = []
+        for p, n in zip(prompts, news):
+            with session(adapter, params, calib, ecfg, slots=1) as solo:
+                rid = solo.submit(p, n)
+                refs.append(solo.drain()[rid].output)
+        # mixed: 2 slots, third request arrives only after a slot frees
+        with session(adapter, params, calib, ecfg) as sess:
+            r0 = sess.submit(prompts[0], news[0])
+            r1 = sess.submit(prompts[1], news[1])
+            for _ in range(3):
+                sess.step()
+            r2 = sess.submit(prompts[2], news[2])   # mid-flight admission
+            done = sess.drain()
+            assert done[r2].admitted_at > done[r1].admitted_at
+        for rid, ref in zip((r0, r1, r2), refs):
+            np.testing.assert_array_equal(done[rid].output, ref)
+
+    def test_async_identical_to_sync_on_trace(self, setup, rng):
+        cfg, params, adapter, calib = setup
+        prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+                   for n in (21, 25, 18)]
+        outs = {}
+        for mode in (False, True):
+            with session(adapter, params, calib,
+                         make_cfg(async_io=mode)) as sess:
+                rids = [sess.submit(p, 5) for p in prompts]
+                done = sess.drain()
+                outs[mode] = [done[r].output for r in rids]
+        for a, b in zip(outs[False], outs[True]):
+            np.testing.assert_array_equal(a, b)
+
+
+class TestSlotRecycling:
+    @pytest.mark.parametrize("device_resident", [False, True])
+    def test_recycled_slot_reads_only_its_own_groups(self, setup,
+                                                     device_resident, rng):
+        """admit→retire→admit into the same slot: no stale mapping-table,
+        reuse-buffer, or device-mirror state leaks into the next tenant —
+        its first fetch reads only its own on-disk groups."""
+        cfg, params, adapter, calib = setup
+        ecfg = make_cfg(device_resident=device_resident)
+        with session(adapter, params, calib, ecfg, slots=1) as sess:
+            eng = sess.engine
+            rid = sess.submit(rng.integers(0, cfg.vocab_size, 29), 4)
+            sess.drain()
+            assert len(sess.result(rid)) == 4
+            # retirement left nothing behind
+            assert not eng.row_active[0]
+            assert eng.row_seq[0] == 0 and eng.row_valid[0] == 0
+            assert (eng.store.n_groups[:, 0] == 0).all()
+            for j in range(len(eng.kv_layers)):
+                assert eng.reuse[j].resident(0) == set()
+                assert (eng.reuse[j].slot_table[0] == -1).all()
+                assert eng.rolling[j].fills[0] == 0
+            # recycle the slot with a shorter prompt
+            log = ReadLog(eng)
+            rid2 = sess.submit(rng.integers(0, cfg.vocab_size, 13), 3)
+            sess.step()   # admission + first decode step
+            own_groups = int(eng.store.n_groups[:, 0].max())
+            assert log.calls, "first step should fetch this row's groups"
+            for layer, bi, start, count in log.calls:
+                assert bi == 0
+                assert start + count <= own_groups, (
+                    "fetch touched groups beyond the new tenant's extent "
+                    "(stale state from the previous occupant)")
+            sess.drain()
+            assert len(sess.result(rid2)) == 3
+
+    def test_recycled_tokens_match_fresh_session(self, setup, rng):
+        """The same prompt decodes identically in a recycled slot and in a
+        fresh engine (recycling is invisible to numerics)."""
+        cfg, params, adapter, calib = setup
+        ecfg = make_cfg(device_resident=True)
+        p1 = rng.integers(0, cfg.vocab_size, 27).astype(np.int32)
+        p2 = rng.integers(0, cfg.vocab_size, 19).astype(np.int32)
+        with session(adapter, params, calib, ecfg, slots=1) as sess:
+            sess.submit(p1, 5)
+            sess.drain()
+            rid = sess.submit(p2, 5)
+            recycled = sess.drain()[rid].output
+        with session(adapter, params, calib, ecfg, slots=1) as fresh:
+            rid = fresh.submit(p2, 5)
+            np.testing.assert_array_equal(fresh.drain()[rid].output, recycled)
+
+
+class TestStopTokens:
+    def _learn_token(self, setup, prompt, step):
+        """Greedy tokens of an unconstrained run (to pick a stop id that
+        will actually be emitted)."""
+        cfg, params, adapter, calib = setup
+        with session(adapter, params, calib, make_cfg(), slots=1) as sess:
+            rid = sess.submit(prompt, 6)
+            return sess.drain()[rid].output[step]
+
+    def test_stopped_row_is_masked_not_truncated(self, setup, rng):
+        cfg, params, adapter, calib = setup
+        prompt = rng.integers(0, cfg.vocab_size, 22).astype(np.int32)
+        stop = int(self._learn_token(setup, prompt, 2))
+        with session(adapter, params, calib, make_cfg(), slots=1) as sess:
+            rid = sess.submit(prompt, 6, stop_ids=(stop,))
+            done = sess.drain()
+            req = done[rid]
+        assert req.stopped_early
+        assert len(req.output) == 3 and req.output[-1] == stop
+        # a stopped request never decodes again: 6-token budget, stopped at
+        # 3 ⇒ only 2 decode steps ran (the stop token is never fed back)
+        assert len(sess.engine.step_log) == 2
+
+    def test_generate_stop_ids_mask_row(self, setup, rng):
+        """Engine-level EOS: the stopped row charges no further reads while
+        the other row keeps decoding to the horizon."""
+        cfg, params, adapter, calib = setup
+        prompts = rng.integers(0, cfg.vocab_size, (2, 24)).astype(np.int32)
+        with KVSwapEngine(adapter, params, make_cfg(), batch=2,
+                          calib_k=calib) as eng:
+            free = eng.generate(prompts, 6)
+        stop = int(free[0, 2])
+        assert stop not in free[1, :5], "pick a stop id unique to row 0"
+        with KVSwapEngine(adapter, params, make_cfg(), batch=2,
+                          calib_k=calib) as eng:
+            out = eng.generate(prompts, 6, stop_ids=(stop,))
+            assert eng.last_stop_mask.tolist() == [True, False]
+            # row 0: prefix matches, then frozen on the stop token
+            np.testing.assert_array_equal(out[0, :3], free[0, :3])
+            assert (out[0, 3:] == stop).all()
+            # row 1 is unaffected
+            np.testing.assert_array_equal(out[1], free[1])
+        # the masking itself, causally: deactivate row 0 mid-decode and no
+        # later fetch may touch it (reads or not, row 1 keeps going)
+        with KVSwapEngine(adapter, params,
+                          make_cfg(reuse_capacity=4), batch=2,
+                          calib_k=calib) as eng:
+            logits = eng.prefill(prompts)
+            log = ReadLog(eng)
+            for _ in range(2):
+                logits = eng.decode_step(np.asarray(jnp.argmax(logits, -1)))
+            eng.deactivate_row(0)
+            log.clear()
+            for _ in range(3):
+                logits = eng.decode_step(np.asarray(jnp.argmax(logits, -1)))
+            assert log.calls and log.rows() == {1}
+
+    def test_session_stats_report_stopped_early(self, setup, rng):
+        cfg, params, adapter, calib = setup
+        prompt = rng.integers(0, cfg.vocab_size, 20).astype(np.int32)
+        stop = int(self._learn_token(setup, prompt, 1))
+        with session(adapter, params, calib, make_cfg(), slots=2) as sess:
+            sess.submit(prompt, 5, stop_ids=(stop,))
+            sess.submit(rng.integers(0, cfg.vocab_size, 16), 4)
+            sess.drain()
+            st = sess.stats()
+        assert st["completed_requests"] == 2
+        assert st["stopped_early"] == 1
+
+
+class TestEmptySlots:
+    def test_empty_slots_issue_no_reads(self, setup, rng):
+        """A 1-request batch in a 2-slot session: the empty slot selects
+        nothing, fetches nothing, and charges nothing."""
+        cfg, params, adapter, calib = setup
+        with session(adapter, params, calib, make_cfg()) as sess:
+            log = ReadLog(sess.engine)
+            rid = sess.submit(rng.integers(0, cfg.vocab_size, 24), 4)
+            sess.drain()
+            assert len(sess.result(rid)) == 4
+            assert log.rows() == {0}, "empty slot 1 must read zero groups"
+
+    def test_batchserver_counts_empty_slots_without_io(self, setup, rng):
+        from repro.serving.scheduler import BatchServer
+
+        cfg, params, adapter, calib = setup
+        srv = BatchServer(adapter, params, make_cfg(), batch=2, calib_k=calib)
+        log = ReadLog(srv.session.engine)
+        rid = srv.submit(rng.integers(0, cfg.vocab_size, 20), max_new=3)
+        srv.flush()
+        assert srv.result(rid).shape == (3,)
+        st = srv.last_stats
+        assert (st["real_requests"], st["padded_requests"]) == (1, 2 - 1)
+        assert log.rows() == {0}
+        srv.close()
+
+    def test_retired_slots_charge_no_io(self, setup, rng):
+        """Mixed max_new: once the short request retires, its slot's reads
+        stop while the long request keeps decoding."""
+        cfg, params, adapter, calib = setup
+        with session(adapter, params, calib, make_cfg()) as sess:
+            log = ReadLog(sess.engine)
+            r0 = sess.submit(rng.integers(0, cfg.vocab_size, 20), 2)  # slot 0
+            sess.submit(rng.integers(0, cfg.vocab_size, 20), 8)       # slot 1
+            while r0 not in sess.completed:
+                sess.step()
+            log.clear()
+            sess.drain()                    # slot 1 decodes on alone
+            st = sess.stats()
+        assert st["completed_requests"] == 2
+        assert log.rows() <= {1}, "retired slot 0 charged IO after finishing"
+
+
+class TestSamplerUnification:
+    def test_greedy_sampler_is_the_sampling_module_entry(self):
+        from repro.serving import sampling
+        from repro.serving.scheduler import greedy_sampler
+
+        assert greedy_sampler is sampling.greedy
+        assert sampling.make_row_sampler(None) is sampling.greedy
+        assert sampling.make_row_sampler(SamplingParams()) is sampling.greedy
+
+    def test_per_row_temperature_is_deterministic_per_seed(self, setup, rng):
+        """A continuous batch mixes greedy and stochastic rows; stochastic
+        rows reproduce exactly under the same per-request seed."""
+        cfg, params, adapter, calib = setup
+        p = [rng.integers(0, cfg.vocab_size, 20).astype(np.int32)
+             for _ in range(2)]
+        outs = []
+        for _ in range(2):
+            with session(adapter, params, calib, make_cfg()) as sess:
+                r0 = sess.submit(p[0], 5)   # greedy
+                r1 = sess.submit(p[1], 5, sampling=SamplingParams(
+                    temperature=0.8, top_k=8, seed=7))
+                done = sess.drain()
+                outs.append((done[r0].output.copy(), done[r1].output.copy()))
+        np.testing.assert_array_equal(outs[0][0], outs[1][0])
+        np.testing.assert_array_equal(outs[0][1], outs[1][1])
+        assert (outs[0][1] >= 0).all() and (outs[0][1] < cfg.vocab_size).all()
+
+    def test_row_independence_of_sampling(self, setup, rng):
+        """A stochastic neighbor must not perturb a greedy row's stream."""
+        cfg, params, adapter, calib = setup
+        p0 = rng.integers(0, cfg.vocab_size, 24).astype(np.int32)
+        p1 = rng.integers(0, cfg.vocab_size, 18).astype(np.int32)
+        with session(adapter, params, calib, make_cfg(), slots=1) as solo:
+            rid = solo.submit(p0, 5)
+            ref = solo.drain()[rid].output
+        with session(adapter, params, calib, make_cfg()) as sess:
+            r0 = sess.submit(p0, 5)
+            sess.submit(p1, 5, sampling=SamplingParams(temperature=1.2, seed=3))
+            np.testing.assert_array_equal(sess.drain()[r0].output, ref)
+
+
+class TestSessionMechanics:
+    def test_poisson_trace_completes_and_orders_admissions(self, setup, rng):
+        cfg, params, adapter, calib = setup
+        with session(adapter, params, calib, make_cfg()) as sess:
+            arrivals = np.cumsum(rng.exponential(5e-5, size=5))
+            rids = [sess.submit(rng.integers(0, cfg.vocab_size,
+                                             int(rng.integers(12, 28))),
+                                int(rng.integers(2, 6)), arrival=float(t))
+                    for t in arrivals]
+            done = sess.drain()
+            st = sess.stats()
+        assert st["completed_requests"] == 5
+        assert st["goodput_tokens_per_s"] > 0
+        admitted = [done[r].admitted_at for r in rids]
+        assert all(done[r].arrival <= done[r].admitted_at for r in rids)
+        # arrivals are FIFO per free slot: admission order follows arrival
+        assert admitted == sorted(admitted)
+
+    def test_submit_rejects_requests_exceeding_capacity(self, setup, rng):
+        """One oversized request must be rejected at the front door, not
+        crash the batch mid-decode after admission."""
+        cfg, params, adapter, calib = setup
+        with session(adapter, params, calib, make_cfg(max_seq=40)) as sess:
+            with pytest.raises(ValueError, match="KV capacity"):
+                sess.submit(rng.integers(0, cfg.vocab_size, 30), 20)
+            with pytest.raises(ValueError, match="empty prompt"):
+                sess.submit(np.empty(0, np.int64), 2)
+            # an exactly-fitting request still serves
+            rid = sess.submit(rng.integers(0, cfg.vocab_size, 30), 10)
+            sess.drain()
+            assert len(sess.result(rid)) == 10
+
+    def test_single_token_requests_complete_without_decode(self, setup, rng):
+        """max_new=1: the token comes from the admission logits and zero
+        decode steps run; BatchServer stats keep their overlap keys."""
+        from repro.serving.scheduler import BatchServer
+
+        cfg, params, adapter, calib = setup
+        with BatchServer(adapter, params, make_cfg(), batch=2,
+                         calib_k=calib) as srv:
+            r1 = srv.submit(rng.integers(0, cfg.vocab_size, 16), max_new=1)
+            r2 = srv.submit(rng.integers(0, cfg.vocab_size, 20), max_new=1)
+            assert srv.result(r1).shape == (1,) and srv.result(r2).shape == (1,)
+            st = srv.last_stats
+            assert st["throughput"] == 0.0            # no decode step measured
+            for key in ("wall_seconds", "io_seconds", "pipelined_seconds"):
+                assert key in st
+            assert len(srv.session.engine.step_log) == 0
+
+    def test_hybrid_models_rejected(self, tiny_params, rng):
+        from repro.models.transformer import ModelConfig, TransformerAdapter
+        from repro.models.transformer import init_params as ip
+
+        cfg = ModelConfig(name="hyb", arch_type="hybrid", n_layers=3,
+                          d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+                          d_ff=128, vocab_size=61,
+                          block_pattern=("mamba2", "shared_attn", "mamba2"),
+                          ssm_state=16)
+        params = ip(jax.random.PRNGKey(1), cfg)
+        calib = rng.standard_normal((64, 4, 16))
+        with pytest.raises(ValueError, match="attention-only"):
+            ServeSession(TransformerAdapter(cfg), params, make_cfg(),
+                         slots=1, calib_k=calib)
+
+    def test_session_prefix_cache_warm_admission(self, setup, rng):
+        """Admissions restore a published prefix (per-row prefill_cached)."""
+        from repro.cache import PrefixCache, PrefixCacheConfig
+
+        cfg, params, adapter, calib = setup
+        ecfg = make_cfg(n_select=24, reuse_capacity=24, predict_from="self",
+                        max_seq=96)
+        sys_prompt = rng.integers(0, cfg.vocab_size, 24)
+        with PrefixCache(PrefixCacheConfig(block_tokens=8)) as cache:
+            with session(adapter, params, calib, ecfg,
+                         prefix_cache=cache) as sess:
+                turn = np.concatenate(
+                    [sys_prompt, rng.integers(0, cfg.vocab_size, 8)])
+                r1 = sess.submit(turn, 4)
+                sess.drain()
+                assert sess.completed[r1].cached_tokens == 0
+                assert sess.published_blocks > 0
+                turn2 = np.concatenate(
+                    [sys_prompt, rng.integers(0, cfg.vocab_size, 8)])
+                r2 = sess.submit(turn2, 4)
+                sess.drain()
+                assert sess.completed[r2].cached_tokens >= 16
+
+    def test_warm_admission_tokens_match_cold(self, setup, rng):
+        """Bit-identity of the warm (restored-prefix) admission path."""
+        from repro.cache import PrefixCache, PrefixCacheConfig
+
+        cfg, params, adapter, calib = setup
+        ecfg = make_cfg(n_select=24, reuse_capacity=24, predict_from="self",
+                        max_seq=96)
+        head = rng.integers(0, cfg.vocab_size, 24)
+        prompt = np.concatenate([head, rng.integers(0, cfg.vocab_size, 7)])
+        with session(adapter, params, calib, ecfg, slots=1) as cold:
+            rid = cold.submit(prompt, 5)
+            ref = cold.drain()[rid].output
+        with PrefixCache(PrefixCacheConfig(block_tokens=8)) as cache:
+            with session(adapter, params, calib, ecfg,
+                         prefix_cache=cache) as sess:
+                sess.submit(head, 2)          # publishes the head
+                sess.drain()
+                rid = sess.submit(prompt, 5)  # warm: head restored from cache
+                done = sess.drain()
+                assert done[rid].cached_tokens >= 16
+                np.testing.assert_array_equal(done[rid].output, ref)
+
+
+def test_engine_config_roundtrip_still_frozen():
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        make_cfg().disk = "emmc"
