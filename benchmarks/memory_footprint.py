@@ -4,13 +4,21 @@ Fig. 1: full KV cache bytes vs context length × batch (Qwen3-4B-like dims).
 Fig. 3a: in-memory management footprint of each method vs full-cache, for
 LLaMA3-8B at batch 8 — KVSwap's compressed-K + buffers vs InfiniGen's
 partial-K and ShadowKV's low-rank-K+landmarks.
+
+Warm-tier audit: fills a real `repro.tiers.WarmTier` past its budget and
+checks the accounting invariant the `warm_budget_bytes` knob promises —
+resident slab bytes + per-entry index overhead never exceed the budget
+(what `KVSwapEngine.metadata_bytes()` reports as `warm_tier` +
+`warm_tier_index`).
 """
 
 from __future__ import annotations
 
+import numpy as np
 
 from benchmarks.common import LLAMA3_8B, Timer, emit
-from repro.utils import GiB, fmt_bytes
+from repro.tiers import WarmTier
+from repro.utils import GiB, MiB, fmt_bytes
 
 FP16 = 2
 
@@ -52,14 +60,36 @@ def fig3a_management_memory(batch=8):
     return rows
 
 
+def warm_tier_budget_audit(budget=16 * MiB, g=4):
+    """Overfill a real warm tier and audit resident bytes against the knob."""
+    hk, d = LLAMA3_8B.n_kv_heads, LLAMA3_8B.head_dim
+    tier = WarmTier(budget_bytes=budget)
+    rng = np.random.default_rng(0)
+    group = rng.standard_normal((g, 2, hk, d)).astype(np.float32)
+    per_entry = g * 2 * hk * d + 4  # int8 payload + scale
+    n = budget // per_entry + 64    # deliberately past the budget
+    for i in range(n):
+        tier.admit(i % 32, i % 8, i, group)
+    snap = tier.snapshot()
+    resident = tier.nbytes + tier.index_nbytes
+    print(f"warm_budget={fmt_bytes(budget)} slab={fmt_bytes(tier.nbytes)} "
+          f"index={fmt_bytes(tier.index_nbytes)} resident={fmt_bytes(resident)} "
+          f"entries={snap['entries']} evicted={snap['evicted']}")
+    assert resident <= budget, "warm tier overran its budget"
+    assert snap["evicted"] > 0, "audit never reached the eviction regime"
+    return resident
+
+
 def main() -> str:
     with Timer() as t:
         fig1_kv_growth()
         rows = fig3a_management_memory()
+        warm_resident = warm_tier_budget_audit()
     ctx32k = rows[-1]
     reduction = ctx32k[1] / ctx32k[4]
     emit("fig1_fig3a_memory", t.us,
-         f"kv32k_b8={fmt_bytes(ctx32k[1])} kvswap_reduction={reduction:.0f}x")
+         f"kv32k_b8={fmt_bytes(ctx32k[1])} kvswap_reduction={reduction:.0f}x "
+         f"warm_tier_resident={fmt_bytes(warm_resident)}")
     return "ok"
 
 

@@ -36,7 +36,7 @@ def main() -> None:
     ap.add_argument("--user-len", type=int, default=12,
                     help="new user tokens per turn")
     ap.add_argument("--max-new", type=int, default=8)
-    ap.add_argument("--disk", choices=("nvme", "emmc"), default="nvme")
+    ap.add_argument("--disk", choices=("nvme", "ufs", "emmc"), default="nvme")
     ap.add_argument("--cache-dir", default=None,
                     help="persist the prefix cache here (survives the process)")
     args = ap.parse_args()

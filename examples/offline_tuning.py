@@ -27,7 +27,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3-8b", choices=registry.list_archs())
     ap.add_argument("--budget-mib", type=int, default=310)
-    ap.add_argument("--disk", choices=("nvme", "emmc"), default="nvme")
+    ap.add_argument("--disk", choices=("nvme", "ufs", "emmc"), default="nvme")
     ap.add_argument("--b-max", type=int, default=8)
     ap.add_argument("--s-max", type=int, default=32768)
     ap.add_argument("--out", default="/tmp/kvswap_tuned")

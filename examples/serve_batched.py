@@ -31,7 +31,7 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=96)
     ap.add_argument("--gen-len", type=int, default=48)
-    ap.add_argument("--disk", choices=("nvme", "emmc"), default="nvme")
+    ap.add_argument("--disk", choices=("nvme", "ufs", "emmc"), default="nvme")
     ap.add_argument("--sync-io", action="store_true",
                     help="disable the async prefetch pipeline (bit-identical)")
     args = ap.parse_args()

@@ -11,11 +11,11 @@ Public API (mirrors the paper's Fig. 4 usage):
 
 from repro.core.engine import EngineConfig, KVSwapEngine
 from repro.core.lowrank import LowRankAdapter, compress_k, fit_adapter
-from repro.core.offload import DISKS, EMMC, NVME, DiskSpec, IOAccountant, KVDiskStore
+from repro.core.offload import DISKS, EMMC, NVME, UFS, DiskSpec, IOAccountant, KVDiskStore
 from repro.core.predictor import PredictorConfig, predict_groups
 
 __all__ = [
     "EngineConfig", "KVSwapEngine", "LowRankAdapter", "compress_k",
-    "fit_adapter", "DISKS", "EMMC", "NVME", "DiskSpec", "IOAccountant",
+    "fit_adapter", "DISKS", "EMMC", "NVME", "UFS", "DiskSpec", "IOAccountant",
     "KVDiskStore", "PredictorConfig", "predict_groups",
 ]

@@ -17,6 +17,13 @@ Two execution modes, selected by :attr:`EngineConfig.async_io`:
   computes.  The two modes run the same per-layer numeric code on the same
   inputs, so decoded tokens are **bit-identical** — only wall-clock changes.
 
+Orthogonally, :attr:`EngineConfig.warm_budget_bytes` inserts a budgeted
+host-RAM **warm tier** (:mod:`repro.tiers`) between the per-layer reuse
+buffers and the disk store: reuse-evicted groups are kept as per-group
+int8 under one global LRU byte budget and served back at memcpy+dequantize
+cost instead of a disk re-read.  0 (default) disables it; at ``kv_bits=8``
+enabling it is token-bit-identical to the disabled control.
+
 Orthogonally, :attr:`EngineConfig.device_resident` picks where the selected
 KV working set lives between steps:
 
@@ -91,7 +98,14 @@ class EngineConfig:
       sequence; adjacent steps share 75–81 % of critical groups (Fig. 8), so
       C converts memory into skipped disk reads.
     * ``max_seq`` — KV capacity in tokens (bounds the memmap file).
-    * ``disk`` — which :class:`DiskSpec` prices modeled I/O ("nvme"/"emmc").
+    * ``disk`` — which :class:`DiskSpec` prices modeled I/O
+      ("nvme"/"ufs"/"emmc").
+    * ``warm_budget_bytes`` — host-RAM byte budget for the quantized warm
+      tier (:mod:`repro.tiers`) between the reuse buffer and disk: groups
+      evicted from the reuse buffer are kept as per-group-scaled int8 under
+      a global LRU budget and served back at memcpy+dequantize cost instead
+      of a disk re-read.  0 (default) disables the tier entirely — tokens
+      and ``StepStats`` are then byte-identical to an engine without it.
     * ``predict_from`` — "prev" scores layer *i* from layer *i−1*'s input
       (cross-layer similarity, §3.3), which is what makes prefetch
       overlappable; "self" predicts from the layer's own input (exact timing
@@ -119,6 +133,7 @@ class EngineConfig:
     reuse_capacity: int = 160      # C (groups per layer per sequence)
     max_seq: int = 4096            # KV capacity (tokens)
     disk: str = "nvme"
+    warm_budget_bytes: int = 0     # host-RAM warm tier budget (0 = disabled)
     predict_from: str = "prev"     # "prev" (paper, overlappable) | "self"
     kv_bits: int = 16              # 16 = raw dtype on disk; 8 = int8 (§7)
     use_pallas: bool = False       # route attention through the Pallas kernel
@@ -148,11 +163,12 @@ class StepStats:
     read time actually hidden under compute (``io_wait < io_seconds``-ish).
     """
 
-    io_seconds: float = 0.0          # modeled disk-read time, summed over layers
+    io_seconds: float = 0.0          # modeled fetch-serve time (disk + warm tier)
     compute_seconds: float = 0.0     # modeled compute time, summed over layers
     pipelined_seconds: float = 0.0   # modeled layer-pipelined step latency
-    io_bytes: int = 0                # cumulative bytes read since engine start
+    io_bytes: int = 0                # cumulative disk bytes read since engine start
     io_requests: int = 0             # cumulative read requests since start
+    warm_bytes: int = 0              # warm-tier-served bytes this step (disk units)
     wall_seconds: float = 0.0        # measured wall time of this step
     io_wait_seconds: float = 0.0     # measured wall time blocked on fetches
     h2d_bytes: int = 0               # host→device KV payload bytes this step
@@ -184,6 +200,7 @@ def summarize_steps(steps: Sequence[StepStats]) -> dict:
         "io_wait_seconds": mean(lambda s: s.io_wait_seconds),
         "h2d_bytes": mean(lambda s: s.h2d_bytes),
         "active_rows": mean(lambda s: s.active_rows),
+        "warm_bytes": mean(lambda s: s.warm_bytes),
     }
 
 
@@ -251,6 +268,7 @@ class KVSwapEngine:
         self._kv_index = {layer: j for j, layer in enumerate(self.kv_layers)}
         n_kv_layers = len(self.kv_layers)
         self.accountant = IOAccountant(cfg.disk_spec)
+        self.compute_spec = hardware.ORIN if cfg.compute == "jetson-orin-agx" else hardware.TPU_V5E
         self.store = KVDiskStore(
             n_layers=n_kv_layers, batch=batch, max_groups=self.max_groups,
             group_size=g, n_kv_heads=model.n_kv_heads, head_dim=model.head_dim,
@@ -271,9 +289,23 @@ class KVSwapEngine:
             for _ in range(n_kv_layers)
         ]
         self.scheduler = ReadScheduler(max_gap=cfg.coalesce_gap)
+        # host-RAM warm tier (victim cache) between reuse buffers and disk:
+        # ONE tier for the whole engine — warm_budget_bytes is a global
+        # budget across layers and rows.  None when disabled, so the
+        # disabled path is literally the pre-tier code.  Imported lazily:
+        # repro.tiers pulls repro.core.hardware, so a module-level import
+        # here would make `import repro.tiers` circular.
+        self.warm = None
+        if cfg.warm_budget_bytes > 0:
+            from repro.tiers import WarmTier
+
+            self.warm = WarmTier(budget_bytes=cfg.warm_budget_bytes,
+                                 compute=self.compute_spec,
+                                 accountant=self.accountant)
+            self.store.warm = self.warm
         self.managers = [
             KVCacheManager(store=self.store, reuse=self.reuse[j], rolling=self.rolling[j],
-                           layer=j, scheduler=self.scheduler)
+                           layer=j, scheduler=self.scheduler, warm=self.warm)
             for j in range(n_kv_layers)
         ]
         self.prefetcher: PrefetchWorker | None = None
@@ -300,7 +332,6 @@ class KVSwapEngine:
             group_size=g, n_select=cfg.n_select,
             n_heads=model.n_heads, n_kv_heads=model.n_kv_heads,
         )
-        self.compute_spec = hardware.ORIN if cfg.compute == "jetson-orin-agx" else hardware.TPU_V5E
         self.dims = hardware.ModelDims(
             d_model=model.d_model, n_heads=model.n_heads, n_kv_heads=model.n_kv_heads,
             head_dim=model.head_dim, d_ff=getattr(model, "d_ff", 4 * model.d_model),
@@ -358,6 +389,13 @@ class KVSwapEngine:
             "rolling_buffer": rolling,
             "total": klr_alloc + reuse + rolling,
         }
+        if self.warm is not None:
+            # warm tier: int8 slab payload + modeled index overhead, both
+            # charged against warm_budget_bytes — the knob is auditable here
+            out["warm_tier"] = self.warm.nbytes
+            out["warm_tier_index"] = self.warm.index_nbytes
+            out["warm_budget_bytes"] = self.warm.budget_bytes
+            out["total"] += out["warm_tier"] + out["warm_tier_index"]
         if any(r.device is not None for r in self.reuse):
             # the device mirrors double C's footprint (host copy + device
             # mirror); reported separately — it bounds *device* memory
@@ -763,6 +801,7 @@ class KVSwapEngine:
         t0 = time.perf_counter()
         if self.device_resident:
             self._ensure_device_state()
+        warm_bytes0 = self.accountant.warm_bytes
         self._h2d_step = 0
         self._step_active = active
         b = self.batch
@@ -798,6 +837,7 @@ class KVSwapEngine:
         snap = self.accountant.snapshot()
         stats.io_bytes = snap["read_bytes"]
         stats.io_requests = snap["read_requests"]
+        stats.warm_bytes = snap["warm_bytes"] - warm_bytes0
         stats.io_wait_seconds = io_wait
         stats.h2d_bytes = self._h2d_step
         stats.active_rows = n_active
@@ -983,7 +1023,8 @@ class KVSwapEngine:
             with self.accountant.track() as tr:
                 table = self.managers[j].fetch(ids, mask)
             io_wait += time.perf_counter() - w0
-            t_io.append(tr.read_seconds)
+            # the fetch-serve lane: disk reads plus warm-tier memcpy+dequant
+            t_io.append(tr.read_seconds + tr.warm_seconds)
             x_prev = x
             x = self._kv_layer(layer, j, x, pos, table, t_compute, flush_rows)
         return x, io_wait

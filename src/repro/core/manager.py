@@ -59,18 +59,36 @@ class KVCacheManager:
     """
 
     def __init__(self, *, store: KVDiskStore, reuse: ReuseBuffer, rolling: RollingBuffer,
-                 layer: int, scheduler: ReadScheduler | None = None):
+                 layer: int, scheduler: ReadScheduler | None = None, warm=None):
         self.store = store
         self.reuse = reuse
         self.rolling = rolling
         self.layer = layer
         self.scheduler = scheduler or ReadScheduler(max_gap=0)
+        # optional host-RAM warm tier (repro.tiers.WarmTier) between the
+        # reuse buffer and disk: fetch consults it before planning disk
+        # reads, and reuse-buffer evictions demote into it (victim cache)
+        self.warm = warm
+        if warm is not None:
+            reuse.victim_sink = self._demote
+
+    def _demote(self, batch_idx: int, gid: int, kv: np.ndarray) -> None:
+        """Reuse-buffer eviction → warm-tier admission.  With an int8 disk
+        tier the group's on-disk scale makes the quantized copy exact (the
+        kv_bits=8 bit-identity contract); ``disk_nbytes`` keeps warm-served
+        accounting in disk-read units."""
+        self.warm.admit(self.layer, batch_idx, gid, kv,
+                        scale=self.store.scale_of(self.layer, batch_idx, gid),
+                        disk_nbytes=self.store.group_nbytes)
 
     def fetch(self, group_ids: np.ndarray, group_mask: np.ndarray) -> MappingTable:
-        """Resolve selected groups: reuse hits stay put, misses load from disk.
+        """Resolve selected groups: reuse hits stay put, warm-tier hits are
+        promoted back from host RAM, true misses load from disk.
 
-        Misses are planned by the :class:`ReadScheduler` into sorted,
-        coalesced sequential runs before touching the store (§3.4.4).
+        Miss resolution order is the memory hierarchy: reuse buffer →
+        warm tier (when attached) → disk.  Only the residue after the warm
+        tier is planned by the :class:`ReadScheduler` into sorted, coalesced
+        sequential runs before touching the store (§3.4.4).
 
         ``group_ids, group_mask``: ``[B, M]``.
         """
@@ -85,6 +103,25 @@ class KVCacheManager:
             want = list(dict.fromkeys(want))
             want_set = set(want)
             _, misses = self.reuse.lookup(bi, want)
+            if self.warm is not None and misses:
+                # consult the warm tier first; only true misses go to disk.
+                # A hit pops the entry (exclusive victim cache) and promotes
+                # the group back into the reuse buffer exactly like a disk
+                # load — including the staged-overflow and device-mirror
+                # delta (new_groups) paths.
+                disk_misses = []
+                for gid in misses:
+                    kv_flat = self.warm.serve(self.layer, bi, gid,
+                                              self.store.dtype)
+                    if kv_flat is None:
+                        disk_misses.append(gid)
+                        continue
+                    slot = self.reuse.insert(bi, gid, kv_flat, protected=want_set)
+                    if slot is None:
+                        staged[(bi, gid)] = kv_flat
+                    else:
+                        new_groups.append((bi, slot, kv_flat))
+                misses = disk_misses
             for run in self.scheduler.plan(misses):
                 k_r, v_r = self.store.read_run(self.layer, bi, run.start, run.count)
                 for gid in run.ids:

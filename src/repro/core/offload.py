@@ -71,10 +71,13 @@ class DiskSpec:
 
 
 # Calibrated to the paper: NVMe peak 1.8 GB/s, eMMC peak 250 MB/s; at 512 B
-# requests both drop below 6 % of peak (Fig. 2).
+# requests both drop below 6 % of peak (Fig. 2).  UFS sits between them —
+# the paper's third evaluated device class (UFS 3.x mobile storage: ~1 GB/s
+# sequential read, per-request overhead between the NVMe and eMMC parts).
 NVME = DiskSpec("nvme", peak_bw=1.8e9, page_bytes=4096, request_latency=3.5e-6)
+UFS = DiskSpec("ufs", peak_bw=1.0e9, page_bytes=4096, request_latency=8e-6)
 EMMC = DiskSpec("emmc", peak_bw=250e6, page_bytes=4096, request_latency=20e-6)
-DISKS = {"nvme": NVME, "emmc": EMMC}
+DISKS = {"nvme": NVME, "ufs": UFS, "emmc": EMMC}
 
 # default plan: merge strictly adjacent ids only (no gap waste)
 _ADJACENT = ReadScheduler(max_gap=0)
@@ -97,7 +100,14 @@ def dequant_groups(q: np.ndarray, scale: np.ndarray, dtype) -> np.ndarray:
 
 @dataclasses.dataclass
 class IOTracker:
-    """Per-scope I/O counters captured by :meth:`IOAccountant.track`."""
+    """Per-scope I/O counters captured by :meth:`IOAccountant.track`.
+
+    ``warm_*`` counts KV served by the host-RAM warm tier
+    (:mod:`repro.tiers`) instead of disk: ``warm_bytes`` is in disk-read
+    units (the read each hit replaced) and ``warm_seconds`` is the modeled
+    memcpy+dequantize cost on the ComputeSpec — a separate *source* lane so
+    callers can report a disk/warm breakdown without reaching into the tier.
+    """
 
     read_bytes: int = 0
     read_requests: int = 0
@@ -105,6 +115,9 @@ class IOTracker:
     write_requests: int = 0
     read_seconds: float = 0.0
     write_seconds: float = 0.0
+    warm_bytes: int = 0
+    warm_requests: int = 0
+    warm_seconds: float = 0.0
 
 
 class IOAccountant:
@@ -131,6 +144,9 @@ class IOAccountant:
             self.write_requests = 0
             self.read_seconds = 0.0
             self.write_seconds = 0.0
+            self.warm_bytes = 0
+            self.warm_requests = 0
+            self.warm_seconds = 0.0
 
     @contextlib.contextmanager
     def track(self):
@@ -174,6 +190,22 @@ class IOAccountant:
             tr.write_seconds += t
         return t
 
+    def charge_warm(self, n_bytes: int, seconds: float,
+                    n_requests: int = 1) -> float:
+        """Charge one warm-tier serve: ``n_bytes`` in disk-read units (the
+        read this hit replaced) at a caller-modeled ``seconds`` cost (the
+        tier prices memcpy+dequantize on a ComputeSpec — this accountant
+        only owns the DiskSpec, which must never price RAM)."""
+        with self._lock:
+            self.warm_bytes += n_bytes
+            self.warm_requests += n_requests
+            self.warm_seconds += seconds
+        for tr in self._trackers():
+            tr.warm_bytes += n_bytes
+            tr.warm_requests += n_requests
+            tr.warm_seconds += seconds
+        return seconds
+
     def snapshot(self) -> dict:
         return {
             "read_bytes": self.read_bytes,
@@ -182,6 +214,19 @@ class IOAccountant:
             "write_requests": self.write_requests,
             "read_seconds": self.read_seconds,
             "write_seconds": self.write_seconds,
+            "warm_bytes": self.warm_bytes,
+            "warm_requests": self.warm_requests,
+            "warm_seconds": self.warm_seconds,
+            # per-source serve breakdown: bytes delivered to fetches by the
+            # disk tier vs the host-RAM warm tier (both in disk-read units)
+            "served_by_source": {
+                "disk": {"bytes": self.read_bytes,
+                         "requests": self.read_requests,
+                         "seconds": self.read_seconds},
+                "warm": {"bytes": self.warm_bytes,
+                         "requests": self.warm_requests,
+                         "seconds": self.warm_seconds},
+            },
         }
 
 
@@ -237,6 +282,10 @@ class KVDiskStore:
         self._mm = np.memmap(path, dtype=self._store_dtype, mode="w+", shape=shape)
         # number of groups currently valid on disk, per (layer, batch)
         self.n_groups = np.zeros((n_layers, batch), dtype=np.int64)
+        # optional host-RAM warm tier (repro.tiers.WarmTier): the store owns
+        # write-coherence — rewriting a (layer, row, group) extent drops its
+        # warm copy, and freeing a row drops every entry the row held
+        self.warm = None
 
     # -- int8 helpers -------------------------------------------------------
     def _quant(self, block: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
@@ -245,6 +294,16 @@ class KVDiskStore:
 
     def _dequant(self, q: np.ndarray, scale: np.ndarray) -> np.ndarray:
         return dequant_groups(q, scale, self.dtype)
+
+    def scale_of(self, layer: int, batch_idx: int, gid: int) -> float | None:
+        """The on-disk int8 scale of one group (``None`` for a raw store).
+
+        Resident metadata (4 B/group): the warm tier re-quantizes evicted
+        groups with it so a warm hit reproduces the disk read bit-for-bit.
+        """
+        if self._scales is None:
+            return None
+        return float(self._scales[layer, batch_idx, gid])
 
     # -- geometry ---------------------------------------------------------
     @property
@@ -283,6 +342,9 @@ class KVDiskStore:
             if self.accountant is not None:
                 # Sequential layer-sized write, one request per batch row.
                 self.accountant.charge_write(b * ng * self.group_nbytes, b)
+            if self.warm is not None:
+                for bi in range(b):
+                    self.warm.invalidate_range(layer, bi, ng)
         self.n_groups[layer, :] = ng
         return ng
 
@@ -311,6 +373,8 @@ class KVDiskStore:
                 self._mm[layer, batch_idx, :ng] = block.astype(self.dtype)
             if self.accountant is not None:
                 self.accountant.charge_write(ng * self.group_nbytes, 1)
+            if self.warm is not None:
+                self.warm.invalidate_range(layer, batch_idx, ng)
         self.n_groups[layer, batch_idx] = ng
         return ng
 
@@ -342,15 +406,22 @@ class KVDiskStore:
         self.n_groups[layer, batch_idx] = gi + 1
         if self.accountant is not None:
             self.accountant.charge_write(self.group_nbytes, 1)
+        if self.warm is not None:
+            # the extent at gi was just (re)written; any warm copy is stale
+            self.warm.invalidate(layer, batch_idx, gi)
 
     def free_row(self, batch_idx: int) -> None:
         """Retire a batch row: its extents become reusable by the next tenant.
 
         The layout is a fixed ``(layer, row, group)``-indexed memmap, so
         "freeing" is resetting the valid-group watermark — the recycled
-        slot's writes then overwrite the old extents in place.
+        slot's writes then overwrite the old extents in place.  Any warm-
+        tier entries the row held are freed with it (slot recycling must
+        never serve a previous tenant's KV).
         """
         self.n_groups[:, batch_idx] = 0
+        if self.warm is not None:
+            self.warm.clear_row(batch_idx)
 
     # -- reads ------------------------------------------------------------
     def read_run(self, layer: int, batch_idx: int, start: int, count: int) -> tuple[np.ndarray, np.ndarray]:

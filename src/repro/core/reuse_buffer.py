@@ -170,6 +170,12 @@ class ReuseBuffer:
         self.stats = ReuseStats()
         # device-side mirror (attached by the engine's device-resident path)
         self.device: DeviceReuseMirror | None = None
+        # eviction hook (batch_idx, group_id, kv_view) → None, called with
+        # the victim's slot contents *before* they are overwritten; the warm
+        # tier (repro.tiers) registers here to admit evicted groups.  Not
+        # called for clear_row/invalidate — those drop state, they don't
+        # demote it.
+        self.victim_sink = None
 
     def attach_device_mirror(self) -> DeviceReuseMirror:
         """(Re)build the device mirror from the current host slot contents.
@@ -239,6 +245,9 @@ class ReuseBuffer:
                 victim = fifo.popleft()
             slot = idx.pop(victim)
             self.slot_table[batch_idx, slot] = -1
+            if self.victim_sink is not None:
+                # demote to the warm tier while the slot bytes are intact
+                self.victim_sink(batch_idx, victim, self.slots[batch_idx, slot])
         idx[group_id] = slot
         fifo.append(group_id)
         self.slot_table[batch_idx, slot] = group_id

@@ -37,6 +37,11 @@ class TunerInputs:
     s_max: int
     budget_bytes: int            # B_max/b_max: *per-batch* KV-management budget (App. A.4)
     disk: str = "nvme"
+    # host-RAM warm tier (repro.tiers): a single global byte budget for int8
+    # copies of reuse-evicted groups.  Charged against the memory budget in
+    # full (conservative — it is shared across rows) and credited in t_io as
+    # re-reads served at memcpy cost instead of disk cost.  0 = no tier.
+    warm_budget_bytes: int = 0
     mg_const: int = 400          # M·G preset (App. A.2)
     sigma_max: float = 32.0
     g_max: int = 16
@@ -140,19 +145,51 @@ def memory_bytes(inp: TunerInputs, *, sigma: float, g: int, m: int, c: int, b: i
     rolling = b * g * entry * inp.n_layers
     # preload buffer shared across layers; merged into reuse when enabled
     staging = b * m * g * entry
-    return k_lr + reuse + rolling + staging
+    # warm tier: one global slab+index budget (repro.tiers), charged whole —
+    # it is shared across rows/layers, so per-batch accounting is conservative
+    return k_lr + reuse + rolling + staging + inp.warm_budget_bytes
+
+
+def warm_hit_fraction(inp: TunerInputs, *, g: int, m: int, b: int,
+                      misses_per_layer: float) -> float:
+    """Modeled fraction of reuse misses the warm tier absorbs.
+
+    The tier holds int8 copies of recently evicted groups under one global
+    budget; its coverage is capacity over the recent-eviction pool it must
+    track — every layer's and row's per-step miss churn over a short recency
+    window (re-reads recur within a few steps, the Fig. 8 tail).
+    """
+    if inp.warm_budget_bytes <= 0 or misses_per_layer <= 0:
+        return 0.0
+    from repro.tiers import INDEX_ENTRY_BYTES
+    entry_q = 2 * inp.dims.n_kv_heads * inp.dims.head_dim  # int8: 1 B/elem
+    per_group = g * entry_q + 4 + INDEX_ENTRY_BYTES
+    capacity_groups = inp.warm_budget_bytes / per_group
+    window = 8  # steps of eviction churn the tier should cover
+    pool = inp.n_layers * b * misses_per_layer * window
+    return min(1.0, capacity_groups / max(pool, 1.0))
 
 
 def t_io(inp: TunerInputs, *, g: int, m: int, c: int, b: int,
          reuse_table: dict[int, float]) -> float:
-    """Modeled per-layer disk time for one decode step."""
+    """Modeled per-layer fetch-serve time for one decode step: disk reads
+    for true misses plus (with ``warm_budget_bytes``) memcpy+dequantize for
+    the re-reads the warm tier absorbs."""
     dims = inp.dims
     entry = 2 * dims.n_kv_heads * dims.head_dim * inp.dtype_bytes
     rr = lookup_reuse(reuse_table, c)
     misses = m * (1.0 - rr)
-    nbytes = int(misses * g * entry) * b
-    nreq = max(1, int(math.ceil(misses))) * b
-    return inp.disk_spec.read_time(nbytes, nreq)
+    wf = warm_hit_fraction(inp, g=g, m=m, b=b, misses_per_layer=misses)
+    disk_misses = misses * (1.0 - wf)
+    nbytes = int(disk_misses * g * entry) * b
+    nreq = max(1, int(math.ceil(disk_misses))) * b
+    t = inp.disk_spec.read_time(nbytes, nreq)
+    if wf > 0.0:
+        warm_groups = misses * wf * b
+        q_bytes = warm_groups * g * 2 * dims.n_kv_heads * dims.head_dim
+        out_bytes = q_bytes * inp.dtype_bytes
+        t += inp.compute.op_time(2.0 * q_bytes, q_bytes + out_bytes)
+    return t
 
 
 def t_model(inp: TunerInputs, *, g: int, m: int, b: int, s: int, sigma: float) -> float:

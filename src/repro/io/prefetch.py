@@ -48,8 +48,8 @@ class PrefetchResult:
     """What a serviced request returns: the payload plus its I/O cost."""
 
     table: object            # whatever fetch_fn produced (engine: MappingTable)
-    io_seconds: float = 0.0  # modeled DiskSpec time charged by this fetch
-    io_bytes: int = 0
+    io_seconds: float = 0.0  # modeled serve time of this fetch (disk + warm tier)
+    io_bytes: int = 0        # disk bytes read
     io_requests: int = 0
     wall_seconds: float = 0.0  # measured service time on the worker thread
 
@@ -174,7 +174,8 @@ class PrefetchWorker:
                     with self._accountant.track() as tr:
                         table = self._fetch_fn(req.layer, *req.args)
                     res = PrefetchResult(
-                        table=table, io_seconds=tr.read_seconds,
+                        table=table,
+                        io_seconds=tr.read_seconds + tr.warm_seconds,
                         io_bytes=tr.read_bytes, io_requests=tr.read_requests,
                         wall_seconds=time.perf_counter() - t0)
                 else:

@@ -31,7 +31,7 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=2)
     ap.add_argument("--prompt-len", type=int, default=96)
     ap.add_argument("--gen-len", type=int, default=32)
-    ap.add_argument("--disk", choices=("nvme", "emmc"), default="nvme")
+    ap.add_argument("--disk", choices=("nvme", "ufs", "emmc"), default="nvme")
     ap.add_argument("--group-size", type=int, default=4)
     ap.add_argument("--n-select", type=int, default=8)
     ap.add_argument("--rank", type=int, default=16)

@@ -259,6 +259,7 @@ class ServeSession:
         tokens = sum(len(r.output) for r in done)
         eng = self.engine
         snap = eng.accountant.snapshot()
+        served = snap["warm_bytes"] + snap["read_bytes"]
         return {
             "completed_requests": len(done),
             "completed_tokens": tokens,
@@ -271,6 +272,14 @@ class ServeSession:
             "read_bytes": snap["read_bytes"],
             "decode_steps": len(eng.step_log),
             **eng.overlap_report(),
+            # warm tier (repro.tiers): session-cumulative bytes served from
+            # host RAM instead of disk, and their share of all fetch-served
+            # bytes — both straight from the accountant's per-source
+            # breakdown (same disk-read units), no reach into tier
+            # internals.  After the overlap_report spread: its "warm_bytes"
+            # is the mean per step, this one is the session total.
+            "warm_bytes": snap["warm_bytes"],
+            "warm_hit_rate": snap["warm_bytes"] / served if served else 0.0,
         }
 
     # -- lifecycle --------------------------------------------------------

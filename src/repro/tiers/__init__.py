@@ -1,0 +1,6 @@
+"""Memory tiers between the per-layer reuse buffer and the disk store."""
+
+from repro.tiers.warm import (INDEX_ENTRY_BYTES, WarmTier, WarmTierStats,
+                              warm_serve_time)
+
+__all__ = ["INDEX_ENTRY_BYTES", "WarmTier", "WarmTierStats", "warm_serve_time"]

@@ -1,0 +1,391 @@
+"""Warm tier (`repro.tiers`): policy edges, coherence, lifecycle, accounting,
+and the engine-level bit-identity contracts."""
+
+import numpy as np
+import pytest
+
+from repro.core.engine import EngineConfig, KVSwapEngine
+from repro.core.hardware import ORIN
+from repro.core.offload import IOAccountant, KVDiskStore, NVME, quant_groups
+from repro.tiers import INDEX_ENTRY_BYTES, WarmTier, warm_serve_time
+
+
+def group(rng, g=4, hk=2, d=16):
+    return rng.standard_normal((g, 2, hk, d)).astype(np.float32)
+
+
+def entry_bytes(g=4, hk=2, d=16):
+    return g * 2 * hk * d + 4 + INDEX_ENTRY_BYTES
+
+
+def make_engine(adapter, params, calib, *, batch=2, **kw):
+    base = dict(group_size=4, n_select=6, rank=8, reuse_capacity=4,
+                max_seq=128)
+    base.update(kw)
+    return KVSwapEngine(adapter, params, EngineConfig(**base), batch=batch,
+                        calib_k=calib)
+
+
+@pytest.fixture(scope="module")
+def setup(tiny_cfg, tiny_params, tiny_adapter, rng):
+    prompt = rng.integers(0, tiny_cfg.vocab_size, (2, 57)).astype(np.int32)
+    calib = rng.standard_normal(
+        (256, tiny_cfg.n_kv_heads, tiny_cfg.head_dim)).astype(np.float32)
+    return tiny_cfg, tiny_params, tiny_adapter, prompt, calib
+
+
+class TestWarmTierUnit:
+    def test_roundtrip_within_int8_tolerance(self, rng):
+        tier = WarmTier(budget_bytes=1 << 20)
+        kv = group(rng)
+        assert tier.admit(0, 0, 7, kv)
+        out = tier.serve(0, 0, 7, np.float32)
+        assert out is not None and out.shape == kv.shape
+        np.testing.assert_allclose(out, kv, atol=np.abs(kv).max() / 127 * 1.01)
+
+    def test_store_scale_roundtrip_is_exact(self, rng):
+        """With the int8 disk tier's own scale, admit→serve reproduces the
+        dequantized disk bytes bit-for-bit (the kv_bits=8 contract)."""
+        kv = group(rng)
+        q, scale = quant_groups(kv)
+        dequant = (q.astype(np.float32) * np.float32(scale)).astype(np.float32)
+        tier = WarmTier(budget_bytes=1 << 20)
+        tier.admit(0, 0, 3, dequant, scale=float(scale))
+        out = tier.serve(0, 0, 3, np.float32)
+        np.testing.assert_array_equal(out, dequant)
+
+    def test_hit_is_exclusive(self, rng):
+        tier = WarmTier(budget_bytes=1 << 20)
+        tier.admit(0, 0, 1, group(rng))
+        assert tier.serve(0, 0, 1, np.float32) is not None
+        assert tier.serve(0, 0, 1, np.float32) is None   # popped by the hit
+        assert tier.bytes_used == 0
+
+    def test_budget_zero_disables_cleanly(self, rng):
+        tier = WarmTier(budget_bytes=0)
+        assert not tier.enabled
+        assert not tier.admit(0, 0, 1, group(rng))
+        assert tier.serve(0, 0, 1, np.float32) is None
+        tier.invalidate(0, 0, 1)
+        tier.clear_row(0)
+        assert len(tier) == 0 and tier.bytes_used == 0
+        assert tier.stats.admitted == 0
+
+    def test_oversized_entry_rejected(self, rng):
+        tier = WarmTier(budget_bytes=entry_bytes() - 1)
+        assert not tier.admit(0, 0, 1, group(rng))
+        assert tier.stats.rejected == 1 and len(tier) == 0
+
+    def test_lru_eviction_order_under_interleaved_rows(self, rng):
+        """Admissions from different rows interleave; eviction is globally
+        least-recent regardless of row, and per-row byte accounting tracks."""
+        tier = WarmTier(budget_bytes=3 * entry_bytes())
+        tier.admit(0, 0, 10, group(rng))
+        tier.admit(0, 1, 11, group(rng))
+        tier.admit(1, 0, 12, group(rng))
+        assert tier.row_bytes(0) == 2 * entry_bytes()
+        assert tier.row_bytes(1) == entry_bytes()
+        tier.admit(1, 1, 13, group(rng))     # evicts (0, 0, 10) — oldest
+        assert tier.serve(0, 0, 10, np.float32) is None
+        assert tier.stats.evicted == 1
+        tier.admit(0, 0, 14, group(rng))     # evicts (0, 1, 11)
+        assert tier.serve(0, 1, 11, np.float32) is None
+        for key in ((1, 0, 12), (1, 1, 13), (0, 0, 14)):
+            assert tier.serve(*key, np.float32) is not None
+        assert tier.bytes_used == 0 and tier.row_bytes(0) == 0
+
+    def test_readmission_refreshes_in_place(self, rng):
+        tier = WarmTier(budget_bytes=4 * entry_bytes())
+        kv2 = group(rng)
+        tier.admit(0, 0, 1, group(rng))
+        tier.admit(0, 0, 1, kv2)
+        assert len(tier) == 1
+        assert tier.bytes_used == entry_bytes()
+        out = tier.serve(0, 0, 1, np.float32)
+        np.testing.assert_allclose(out, kv2, atol=np.abs(kv2).max() / 127 * 1.01)
+
+    def test_clear_row_frees_only_that_row(self, rng):
+        tier = WarmTier(budget_bytes=1 << 20)
+        tier.admit(0, 0, 1, group(rng))
+        tier.admit(1, 0, 2, group(rng))
+        tier.admit(0, 1, 3, group(rng))
+        tier.clear_row(0)
+        assert tier.row_bytes(0) == 0
+        assert tier.serve(0, 0, 1, np.float32) is None
+        assert tier.serve(1, 0, 2, np.float32) is None
+        assert tier.serve(0, 1, 3, np.float32) is not None
+
+    def test_serve_charges_warm_lane_not_disk(self, rng):
+        acct = IOAccountant(NVME)
+        tier = WarmTier(budget_bytes=1 << 20, compute=ORIN, accountant=acct)
+        kv = group(rng)
+        tier.admit(0, 0, 1, kv, disk_nbytes=4096)
+        with acct.track() as tr:
+            tier.serve(0, 0, 1, np.float32)
+        assert tr.warm_bytes == 4096 and tr.warm_requests == 1
+        assert tr.warm_seconds == pytest.approx(
+            warm_serve_time(ORIN, kv.size, kv.size * 4))
+        assert tr.read_bytes == 0 and tr.read_seconds == 0.0
+        snap = acct.snapshot()
+        assert snap["warm_bytes"] == 4096
+        assert snap["served_by_source"]["warm"]["bytes"] == 4096
+        assert snap["served_by_source"]["disk"]["bytes"] == 0
+
+
+class TestStoreCoherence:
+    def make_store(self, warm, quant_bits=0):
+        store = KVDiskStore(n_layers=2, batch=2, max_groups=8, group_size=4,
+                            n_kv_heads=2, head_dim=16, quant_bits=quant_bits)
+        store.warm = warm
+        return store
+
+    def test_append_invalidates_rewritten_group(self, rng):
+        tier = WarmTier(budget_bytes=1 << 20)
+        with self.make_store(tier) as store:
+            tier.admit(0, 0, 0, group(rng))
+            tier.admit(0, 0, 1, group(rng))
+            k = rng.standard_normal((4, 2, 16)).astype(np.float32)
+            store.append_group_row(0, 0, k, k)     # writes group 0 of row 0
+            assert tier.serve(0, 0, 0, np.float32) is None
+            assert tier.stats.invalidated == 1
+            assert tier.serve(0, 0, 1, np.float32) is not None
+
+    def test_write_prefill_row_invalidates_written_range(self, rng):
+        tier = WarmTier(budget_bytes=1 << 20)
+        with self.make_store(tier) as store:
+            for gid in range(3):
+                tier.admit(1, 0, gid, group(rng))
+            tier.admit(0, 0, 0, group(rng))   # other layer, same row
+            k = rng.standard_normal((8, 2, 16)).astype(np.float32)  # 2 groups
+            store.write_prefill_row(1, 0, k, k)
+            assert tier.serve(1, 0, 0, np.float32) is None
+            assert tier.serve(1, 0, 1, np.float32) is None
+            assert tier.serve(1, 0, 2, np.float32) is not None  # beyond range
+            assert tier.serve(0, 0, 0, np.float32) is not None  # other layer
+
+    def test_free_row_clears_every_layer(self, rng):
+        tier = WarmTier(budget_bytes=1 << 20)
+        with self.make_store(tier) as store:
+            tier.admit(0, 1, 0, group(rng))
+            tier.admit(1, 1, 5, group(rng))
+            tier.admit(0, 0, 0, group(rng))
+            store.free_row(1)
+            assert tier.row_bytes(1) == 0
+            assert tier.serve(1, 1, 5, np.float32) is None
+            assert tier.serve(0, 0, 0, np.float32) is not None
+
+
+class TestEngineBitIdentity:
+    """The acceptance contract: warm_budget_bytes=0 is the pre-tier engine,
+    and at kv_bits=8 the tier changes bytes moved, never tokens."""
+
+    @pytest.mark.parametrize("device_resident", [False, True])
+    @pytest.mark.parametrize("async_io", [False, True])
+    def test_kv8_tokens_match_disabled_control(self, setup, device_resident,
+                                               async_io):
+        cfg, params, adapter, prompt, calib = setup
+        outs, reads = {}, {}
+        for wb in (0, 1 << 20):
+            with make_engine(adapter, params, calib, kv_bits=8,
+                             device_resident=device_resident,
+                             async_io=async_io, warm_budget_bytes=wb) as eng:
+                outs[wb] = eng.generate(prompt, 10)
+                reads[wb] = eng.accountant.snapshot()["read_bytes"]
+                if wb:
+                    assert eng.warm is not None
+                    assert eng.warm.stats.hits > 0, \
+                        "config never exercised the warm tier"
+        np.testing.assert_array_equal(outs[0], outs[1 << 20])
+        assert reads[1 << 20] < reads[0]
+
+    def test_disabled_is_inert(self, setup):
+        cfg, params, adapter, prompt, calib = setup
+        with make_engine(adapter, params, calib) as eng:
+            assert eng.warm is None
+            assert eng.store.warm is None
+            assert all(m.warm is None for m in eng.managers)
+            assert all(r.victim_sink is None for r in eng.reuse)
+            eng.generate(prompt, 4)
+            snap = eng.accountant.snapshot()
+            assert snap["warm_bytes"] == 0 and snap["warm_seconds"] == 0.0
+            assert all(s.warm_bytes == 0 for s in eng.step_log)
+            assert "warm_tier" not in eng.metadata_bytes()
+
+    def test_fp_raw_disk_within_quant_tolerance(self, setup):
+        """With a raw fp disk tier the warm copy is freshly int8-quantized:
+        every group the tier serves must match its on-disk fp contents
+        within one per-group quantization step (the issue's "quantization
+        tolerance" contract for fp disk tiers)."""
+        cfg, params, adapter, prompt, calib = setup
+        with make_engine(adapter, params, calib, kv_bits=16,
+                         warm_budget_bytes=1 << 20) as eng:
+            served: list[tuple[np.ndarray, np.ndarray]] = []
+            orig = eng.warm.serve
+
+            def spy(layer, bi, gid, dtype):
+                out = orig(layer, bi, gid, dtype)
+                if out is not None:
+                    served.append(
+                        (out, np.asarray(eng.store._mm[layer, bi, gid],
+                                         dtype=np.float32)))
+                return out
+
+            eng.warm.serve = spy   # managers share this very instance
+            eng.generate(prompt, 10)
+            assert served, "config never exercised the warm tier"
+            for out, disk in served:
+                step = np.abs(disk).max() / 127.0
+                np.testing.assert_allclose(out, disk, atol=step * 1.01)
+
+    def test_warm_seconds_flow_into_step_stats(self, setup):
+        cfg, params, adapter, prompt, calib = setup
+        for async_io in (False, True):
+            with make_engine(adapter, params, calib, kv_bits=8, async_io=async_io,
+                             warm_budget_bytes=1 << 20) as eng:
+                eng.generate(prompt, 8)
+                # per-step warm_bytes (like h2d_bytes) sum to the cumulative
+                # accountant total, and the report's mean reflects them
+                per_step = sum(s.warm_bytes for s in eng.step_log)
+                assert per_step == eng.accountant.warm_bytes > 0
+                rep = eng.overlap_report()
+                assert rep["warm_bytes"] > 0
+                # warm serves are orders cheaper than the disk reads they
+                # replace but must not be free
+                assert eng.accountant.warm_seconds > 0.0
+                assert (eng.accountant.warm_seconds
+                        < NVME.read_time(eng.accountant.warm_bytes,
+                                         eng.warm.stats.hits))
+
+    def test_metadata_reports_budget_and_residency(self, setup):
+        cfg, params, adapter, prompt, calib = setup
+        with make_engine(adapter, params, calib, kv_bits=8,
+                         warm_budget_bytes=1 << 20) as eng:
+            eng.generate(prompt, 8)
+            meta = eng.metadata_bytes()
+            assert meta["warm_budget_bytes"] == 1 << 20
+            assert 0 < meta["warm_tier"] + meta["warm_tier_index"] <= 1 << 20
+            assert meta["total"] >= meta["warm_tier"]
+
+
+class TestRowLifecycle:
+    def test_retire_row_frees_warm_bytes(self, setup):
+        cfg, params, adapter, prompt, calib = setup
+        with make_engine(adapter, params, calib, kv_bits=8,
+                         warm_budget_bytes=1 << 20) as eng:
+            eng.prefill(prompt)
+            for _ in range(8):
+                eng.decode_step(np.zeros(2, dtype=np.int64))
+            assert eng.warm.row_bytes(0) > 0
+            eng.retire_row(0)
+            assert eng.warm.row_bytes(0) == 0
+            assert eng.warm.row_bytes(1) > 0   # neighbor untouched
+
+    def test_recycled_slot_serves_no_stale_warm_kv(self, setup, rng):
+        """Read-log shim: tenant B decodes identically in a recycled slot
+        (where tenant A left warm entries behind) and in a fresh engine —
+        and every group B consumes arrives from B's own disk reads or B's
+        own warm entries, never A's."""
+        cfg, params, adapter, prompt, calib = setup
+        prompt_b = rng.integers(0, cfg.vocab_size, (37,)).astype(np.int32)
+
+        def drive(eng, bi):
+            logits = eng.admit_row(bi, prompt_b)
+            toks = []
+            for _ in range(8):
+                step_tok = np.zeros(eng.batch, dtype=np.int64)
+                step_tok[bi] = int(np.argmax(np.asarray(logits)))
+                toks.append(step_tok[bi])
+                logits = np.asarray(eng.decode_step(step_tok))[bi]
+            return toks
+
+        with make_engine(adapter, params, calib, kv_bits=8,
+                         warm_budget_bytes=1 << 20) as eng:
+            eng.prefill(prompt)          # tenant A in every slot
+            for _ in range(8):
+                eng.decode_step(np.zeros(2, dtype=np.int64))
+            assert eng.warm.row_bytes(0) > 0
+            eng.retire_row(0)
+            eng.deactivate_row(1)        # quiesce the neighbor
+            read_log = []
+            orig = eng.store.read_run
+
+            def spy(layer, bi, start, count):
+                read_log.append((layer, bi, start, count))
+                return orig(layer, bi, start, count)
+
+            eng.store.read_run = spy
+            toks_recycled = drive(eng, 0)
+            assert all(bi == 0 for _, bi, _, _ in read_log)
+
+        with make_engine(adapter, params, calib, kv_bits=8,
+                         warm_budget_bytes=1 << 20, batch=1) as eng:
+            toks_fresh = drive(eng, 0)
+        assert toks_recycled == toks_fresh
+
+
+class TestServeSessionIntegration:
+    def test_session_tokens_match_and_stats_report_warm(self, setup, rng):
+        """A continuous-batching session over a warm-tier engine emits the
+        same tokens as the tier-disabled session (kv_bits=8) and reports the
+        tier's share via the accountant breakdown, not tier internals."""
+        from repro.serving.api import ServeSession
+
+        cfg, params, adapter, prompt, calib = setup
+        ecfg_kw = dict(group_size=4, n_select=6, rank=8, reuse_capacity=4,
+                       max_seq=128, kv_bits=8)
+        prompts = [rng.integers(0, cfg.vocab_size, (n,)).astype(np.int64)
+                   for n in (41, 33, 37)]
+        outs, stats = {}, {}
+        for wb in (0, 1 << 20):
+            sess = ServeSession(adapter, params,
+                                EngineConfig(warm_budget_bytes=wb, **ecfg_kw),
+                                slots=2, calib_k=calib)
+            with sess:
+                rids = [sess.submit(p, max_new=8) for p in prompts]
+                done = sess.drain()
+                outs[wb] = [done[r].output for r in rids]
+                stats[wb] = sess.stats()
+        for a, b in zip(outs[0], outs[1 << 20]):
+            np.testing.assert_array_equal(a, b)
+        assert stats[0]["warm_bytes"] == 0 and stats[0]["warm_hit_rate"] == 0.0
+        on = stats[1 << 20]
+        assert on["warm_bytes"] > 0
+        # session-cumulative warm_bytes must be self-consistent with the
+        # hit rate in the same dict (the overlap_report spread must not
+        # clobber it with the per-step mean)
+        assert on["warm_hit_rate"] == pytest.approx(
+            on["warm_bytes"] / (on["warm_bytes"] + on["read_bytes"]))
+        assert 0.0 < on["warm_hit_rate"] < 1.0
+        assert on["read_bytes"] < stats[0]["read_bytes"]
+
+
+class TestTunerKnob:
+    def _inputs(self, warm=0):
+        from repro.core import tuner
+        from repro.core.hardware import ModelDims
+        dims = ModelDims(d_model=4096, n_heads=32, n_kv_heads=8, head_dim=128,
+                         d_ff=14336)
+        return tuner.TunerInputs(dims=dims, n_layers=32, b_max=4, s_max=16384,
+                                 budget_bytes=400 << 20, disk="emmc",
+                                 warm_budget_bytes=warm)
+
+    def test_budget_counts_and_tio_drops(self):
+        from repro.core import tuner
+        base, warm = self._inputs(0), self._inputs(64 << 20)
+        table = tuner.default_reuse_table()
+        kw = dict(sigma=16.0, g=4, m=100, c=64, b=1, s=16384)
+        assert (tuner.memory_bytes(warm, **kw)
+                == tuner.memory_bytes(base, **kw) + (64 << 20))
+        t0 = tuner.t_io(base, g=4, m=100, c=64, b=1, reuse_table=table)
+        t1 = tuner.t_io(warm, g=4, m=100, c=64, b=1, reuse_table=table)
+        assert t1 < t0
+        # zero budget leaves the pre-tier model untouched
+        assert tuner.warm_hit_fraction(base, g=4, m=100, b=1,
+                                       misses_per_layer=10.0) == 0.0
+
+    def test_ufs_spec_ordering(self):
+        from repro.core.offload import DISKS
+        assert set(DISKS) >= {"nvme", "ufs", "emmc"}
+        for size in (4096, 1 << 20):
+            assert (DISKS["nvme"].read_time(size) < DISKS["ufs"].read_time(size)
+                    < DISKS["emmc"].read_time(size))
