@@ -78,6 +78,7 @@ from repro.core.predictor import PredictorConfig
 from repro.core.reuse_buffer import ReuseBuffer
 from repro.core.rolling_buffer import RollingBuffer
 from repro.io import DoubleBuffer, PrefetchWorker, ReadScheduler
+from repro.utils import stats as stats_util
 
 
 @dataclasses.dataclass(frozen=True)
@@ -186,11 +187,19 @@ def summarize_steps(steps: Sequence[StepStats]) -> dict:
     Shared by :meth:`KVSwapEngine.overlap_report` (whole-engine view) and the
     serving session, which summarizes only its own flush window of a
     persistent engine's ``step_log``.
+
+    ``step_seconds_p50/p95/p99`` are tail percentiles of the modeled
+    per-step latency (``pipelined_seconds``) over the window — means hide
+    exactly the straggler steps (reuse-buffer cold starts, C<M overflow
+    rounds) that break per-token SLOs, so the serving harness and the
+    engine report the same tail statistic from the same helper
+    (:func:`repro.utils.stats.percentile`).
     """
     if not steps:
         return {}
     n = len(steps)
     mean = lambda f: sum(f(s) for s in steps) / n
+    tails = stats_util.percentiles([s.pipelined_seconds for s in steps])
     return {
         "io_seconds": mean(lambda s: s.io_seconds),
         "compute_seconds": mean(lambda s: s.compute_seconds),
@@ -201,6 +210,7 @@ def summarize_steps(steps: Sequence[StepStats]) -> dict:
         "h2d_bytes": mean(lambda s: s.h2d_bytes),
         "active_rows": mean(lambda s: s.active_rows),
         "warm_bytes": mean(lambda s: s.warm_bytes),
+        **{f"step_seconds_{k}": v for k, v in tails.items()},
     }
 
 
@@ -268,7 +278,7 @@ class KVSwapEngine:
         self._kv_index = {layer: j for j, layer in enumerate(self.kv_layers)}
         n_kv_layers = len(self.kv_layers)
         self.accountant = IOAccountant(cfg.disk_spec)
-        self.compute_spec = hardware.ORIN if cfg.compute == "jetson-orin-agx" else hardware.TPU_V5E
+        self.compute_spec = hardware.COMPUTES.get(cfg.compute, hardware.TPU_V5E)
         self.store = KVDiskStore(
             n_layers=n_kv_layers, batch=batch, max_groups=self.max_groups,
             group_size=g, n_kv_heads=model.n_kv_heads, head_dim=model.head_dim,

@@ -25,9 +25,19 @@ class ComputeSpec:
 # Jetson Orin AGX: Ampere iGPU, ~10.6 TFLOP/s dense fp16, LPDDR5 ~204.8 GB/s.
 ORIN = ComputeSpec("jetson-orin-agx", peak_flops=10.6e12, mem_bw=204.8e9)
 
+# Jetson Orin Nano class (entry on-device tier): ~1.28 TFLOP/s dense fp16,
+# LPDDR5 ~68 GB/s.  The weakest platform the paper's eMMC/UFS story targets;
+# the SLO trace harness defaults to it so prefill compute and storage reads
+# sit at realistic relative scales for a small model.
+ORIN_NANO = ComputeSpec("jetson-orin-nano", peak_flops=1.28e12, mem_bw=68e9)
+
 # TPU v5e (dry-run/roofline target): 197 TFLOP/s bf16, 819 GB/s HBM,
 # ~50 GB/s per ICI link (constants fixed by the reproduction brief).
 TPU_V5E = ComputeSpec("tpu-v5e", peak_flops=197e12, mem_bw=819e9, link_bw=50e9)
+
+# Platform registry for ``EngineConfig.compute``; unknown names fall back to
+# TPU_V5E (the historical behavior for anything non-Jetson).
+COMPUTES: dict[str, ComputeSpec] = {s.name: s for s in (ORIN, ORIN_NANO, TPU_V5E)}
 
 
 @dataclasses.dataclass(frozen=True)

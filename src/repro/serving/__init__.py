@@ -2,9 +2,16 @@ from repro.serving.api import Request, ServeSession
 from repro.serving.decode import (KVSwapServeConfig, attach_kvswap_adapters,
                                   flush_rolling, init_cache, prefill,
                                   serve_step)
+from repro.serving.metrics import (SLOClass, aggregate_requests,
+                                   per_request_breakdown, request_record)
 from repro.serving.sampling import SamplingParams, make_row_sampler
 from repro.serving.scheduler import BatchServer
+from repro.serving.trace import (Trace, TraceRequest, burst_trace,
+                                 chat_trace, doc_trace, replay)
 
 __all__ = ["KVSwapServeConfig", "attach_kvswap_adapters", "flush_rolling",
            "init_cache", "prefill", "serve_step", "BatchServer", "Request",
-           "ServeSession", "SamplingParams", "make_row_sampler"]
+           "ServeSession", "SamplingParams", "make_row_sampler",
+           "SLOClass", "aggregate_requests", "per_request_breakdown",
+           "request_record", "Trace", "TraceRequest", "chat_trace",
+           "doc_trace", "burst_trace", "replay"]

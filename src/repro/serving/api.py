@@ -58,15 +58,21 @@ class Request:
     stop_ids: tuple = ()
     sampling: SamplingParams | None = None
     arrival: float = 0.0                # modeled seconds on the session clock
+    slo_class: str = ""                 # trace-harness SLO class label
     # raw ``logits [1, V] -> ids [1]`` override (BatchServer compatibility);
     # prefer ``sampling`` for new code
     sampler: Callable | None = dataclasses.field(default=None, repr=False)
-    # filled in by the session
+    # filled in by the session — the full lifecycle on the modeled clock:
+    #   arrival <= admitted_at <= first_token_at <= finished_at
+    # (admitted_at already includes the admission's own modeled prefill;
+    # first_token_at == admitted_at unless later admissions in the same
+    # scheduler iteration charged their prefills before the sampling pass)
     output: np.ndarray | None = None    # [<= max_new] generated ids
     stopped_early: bool = False         # hit a stop token before max_new
     state: str = WAITING
     slot: int | None = None
     admitted_at: float | None = None    # session clock at admission
+    first_token_at: float | None = None  # clock when token 0 was sampled
     finished_at: float | None = None
     cached_tokens: int = 0              # prompt tokens restored from the cache
 
@@ -117,11 +123,13 @@ class ServeSession:
                stop_ids: Sequence[int] = (),
                sampling: SamplingParams | None = None,
                sampler: Callable | None = None,
-               arrival: float | None = None) -> int:
+               arrival: float | None = None,
+               slo_class: str = "") -> int:
         """Enqueue a request; returns its id.  ``arrival`` (modeled seconds)
         defaults to "already here"; future arrivals wait on the clock.
         ``sampler`` overrides ``sampling`` with a raw ``logits -> ids``
-        callable (BatchServer compatibility)."""
+        callable (BatchServer compatibility).  ``slo_class`` is an opaque
+        label the trace harness uses to bucket attainment per class."""
         if max_new < 1:
             raise ValueError("max_new must be >= 1")
         n_prompt = int(np.asarray(prompt).reshape(-1).shape[0])
@@ -138,7 +146,8 @@ class ServeSession:
                       prompt=np.asarray(prompt).reshape(-1).astype(np.int64),
                       max_new=int(max_new), stop_ids=tuple(stop_ids),
                       sampling=sampling, sampler=sampler,
-                      arrival=float(self.now if arrival is None else arrival))
+                      arrival=float(self.now if arrival is None else arrival),
+                      slo_class=str(slo_class))
         self._waiting.append(req)
         return req.rid
 
@@ -213,6 +222,8 @@ class ServeSession:
             slot = self._slots[i]
             tok = int(np.asarray(slot.sampler(slot.logits)).reshape(-1)[0])
             slot.out.append(tok)
+            if len(slot.out) == 1:
+                slot.req.first_token_at = self.now
             events.append({"type": "token", "rid": slot.req.rid, "slot": i,
                            "token": tok})
             if tok in slot.stop_set:
@@ -252,6 +263,13 @@ class ServeSession:
         return self.completed[rid].output
 
     # -- accounting -------------------------------------------------------
+    def per_request(self) -> list[dict]:
+        """Per-request lifecycle breakdown (queue wait, TTFT, TPOT, end-to-
+        end) for every completed request, ordered by rid — the aggregation
+        path :mod:`repro.serving.metrics` and the trace harness share."""
+        from repro.serving import metrics
+        return metrics.per_request_breakdown(self.completed.values())
+
     def stats(self) -> dict:
         """Session-cumulative serving stats (goodput = completed-request
         tokens per modeled second — the benchmark's headline metric)."""

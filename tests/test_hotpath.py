@@ -32,6 +32,7 @@ class TestBitIdentity:
     """The hard contract: device-resident and host-gather decode the same
     tokens, bit for bit, across every config axis."""
 
+    @pytest.mark.slow  # superseded in default CI by tests/test_equality_matrix.py
     @pytest.mark.parametrize("predict_from", ["prev", "self"])
     @pytest.mark.parametrize("kv_bits", [16, 8])
     @pytest.mark.parametrize("use_pallas", [False, True])
@@ -47,6 +48,7 @@ class TestBitIdentity:
                 assert eng.device_resident is dr
         np.testing.assert_array_equal(outs[False], outs[True])
 
+    @pytest.mark.slow  # superseded in default CI by tests/test_equality_matrix.py
     def test_identity_through_async_pipeline(self, setup):
         cfg, params, adapter, prompt, calib = setup
         outs = {}

@@ -408,6 +408,7 @@ class TestSessionMechanics:
                 sess.drain()
                 assert sess.completed[r2].cached_tokens >= 16
 
+    @pytest.mark.slow  # superseded in default CI by tests/test_equality_matrix.py
     def test_warm_admission_tokens_match_cold(self, setup, rng):
         """Bit-identity of the warm (restored-prefix) admission path."""
         from repro.cache import PrefixCache, PrefixCacheConfig

@@ -1,13 +1,16 @@
 """Warm tier (`repro.tiers`): policy edges, coherence, lifecycle, accounting,
-and the engine-level bit-identity contracts."""
+property-based invariants, and the engine-level bit-identity contracts."""
 
 import numpy as np
 import pytest
+from conftest import hypothesis_or_stubs
 
 from repro.core.engine import EngineConfig, KVSwapEngine
 from repro.core.hardware import ORIN
 from repro.core.offload import IOAccountant, KVDiskStore, NVME, quant_groups
 from repro.tiers import INDEX_ENTRY_BYTES, WarmTier, warm_serve_time
+
+given, settings, st = hypothesis_or_stubs()
 
 
 def group(rng, g=4, hk=2, d=16):
@@ -175,10 +178,116 @@ class TestStoreCoherence:
             assert tier.serve(0, 0, 0, np.float32) is not None
 
 
+# -- property-based invariants -------------------------------------------
+# Ops are encoded as (code, layer, row, gid, seed) tuples so the same
+# model-based runner serves both the hypothesis strategy and the seeded
+# fallback stress test (the fallback keeps the invariants exercised in
+# environments without hypothesis, where @given-tests skip).
+N_ROWS, N_GIDS = 3, 4
+ADMIT, SERVE, INVALIDATE, REWRITE, CLEAR_ROW = range(5)
+
+
+def _int_group(seed):
+    """Integer-valued float32 payload: with scale=1.0 the int8 round trip
+    is exact, so the shadow model can demand bitwise equality on hits."""
+    return np.random.default_rng(seed).integers(
+        -100, 101, size=(4, 2, 2, 16)).astype(np.float32)
+
+
+def _run_ops(ops, budget_bytes):
+    """Model-based runner: apply ops, checking after every one that
+
+    * charged bytes never exceed the budget and never go negative,
+    * per-row accounting and the entry count agree with the total,
+    * a hit returns exactly the **latest** admitted payload (an
+      invalidated/rewritten extent can never serve stale data),
+    * a hit is exclusive (the immediate re-serve misses).
+
+    The shadow dict is not an LRU model: eviction may drop any entry at any
+    admit, so a miss is always legal — the properties constrain what a
+    *hit* may return, plus the byte accounting.
+    """
+    tier = WarmTier(budget_bytes=budget_bytes)
+    shadow = {}
+    eb = entry_bytes()
+    for code, layer, row, gid, seed in ops:
+        key = (layer, row, gid)
+        if code == ADMIT:
+            kv = _int_group(seed)
+            if tier.admit(layer, row, gid, kv, scale=1.0):
+                shadow[key] = kv
+        elif code == SERVE:
+            got = tier.serve(layer, row, gid, np.float32)
+            if got is not None:
+                assert key in shadow, "served an entry the model never admitted"
+                np.testing.assert_array_equal(got, shadow[key])
+                assert tier.serve(layer, row, gid, np.float32) is None, \
+                    "pop-on-hit exclusivity violated"
+            shadow.pop(key, None)
+        elif code == INVALIDATE:
+            tier.invalidate(layer, row, gid)
+            shadow.pop(key, None)
+        elif code == REWRITE:
+            # the store's rewrite coherence path: extent invalidated, new
+            # contents admitted — a later hit must see only the new bytes
+            tier.invalidate(layer, row, gid)
+            shadow.pop(key, None)
+            kv = _int_group(seed + 10_007)
+            if tier.admit(layer, row, gid, kv, scale=1.0):
+                shadow[key] = kv
+        else:
+            tier.clear_row(row)
+            for k in [k for k in shadow if k[1] == row]:
+                del shadow[k]
+        assert 0 <= tier.bytes_used <= max(tier.budget_bytes, 0)
+        assert tier.bytes_used == len(tier) * eb
+        assert sum(tier.row_bytes(r) for r in range(N_ROWS)) == tier.bytes_used
+    return tier
+
+
+_BUDGETS = (0, entry_bytes(), 3 * entry_bytes() + 17, 1 << 20)
+
+_op_strategy = st.tuples(st.integers(0, 4), st.integers(0, 1),
+                         st.integers(0, N_ROWS - 1),
+                         st.integers(0, N_GIDS - 1), st.integers(0, 999))
+
+
+class TestWarmTierProperties:
+    @given(ops=st.lists(_op_strategy, max_size=60),
+           budget=st.sampled_from(_BUDGETS))
+    @settings(max_examples=40, deadline=None)
+    def test_random_ops_hold_invariants(self, ops, budget):
+        _run_ops(ops, budget)
+
+    @pytest.mark.parametrize("seed", range(4))
+    @pytest.mark.parametrize("budget", _BUDGETS)
+    def test_seeded_random_ops_hold_invariants(self, seed, budget):
+        """Hypothesis-free twin of the property test (same runner, seeded
+        op stream) so the invariants run even where @given-tests skip."""
+        rng = np.random.default_rng(seed)
+        ops = [(int(rng.integers(0, 5)), int(rng.integers(0, 2)),
+                int(rng.integers(0, N_ROWS)), int(rng.integers(0, N_GIDS)),
+                int(rng.integers(0, 1000))) for _ in range(250)]
+        tier = _run_ops(ops, budget)
+        if budget >= 3 * entry_bytes():
+            assert tier.stats.admitted > 0 and tier.stats.hits > 0
+
+    def test_eviction_pressure_reaches_steady_state(self):
+        """Tight budget + admit-only stream: evictions occur, yet residency
+        stays exactly at the largest admissible entry count."""
+        budget = 2 * entry_bytes() + 5
+        ops = [(ADMIT, l, r, g, 7 * l + r + g)
+               for l in range(2) for r in range(N_ROWS) for g in range(N_GIDS)]
+        tier = _run_ops(ops, budget)
+        assert len(tier) == 2
+        assert tier.stats.evicted == len(ops) - 2
+
+
 class TestEngineBitIdentity:
     """The acceptance contract: warm_budget_bytes=0 is the pre-tier engine,
     and at kv_bits=8 the tier changes bytes moved, never tokens."""
 
+    @pytest.mark.slow  # superseded in default CI by tests/test_equality_matrix.py
     @pytest.mark.parametrize("device_resident", [False, True])
     @pytest.mark.parametrize("async_io", [False, True])
     def test_kv8_tokens_match_disabled_control(self, setup, device_resident,
