@@ -2,6 +2,7 @@
 
 from __future__ import annotations
 
+import json
 import sys
 import time
 from pathlib import Path
@@ -54,3 +55,25 @@ class Timer:
 
 def emit(name: str, us: float, derived: str) -> None:
     print(f"{name},{us:.0f},{derived}")
+
+
+def write_bench_json(name: str, payload, *, tiny: bool = False,
+                     path: str | Path | None = None, indent: int = 2) -> Path:
+    """Write a benchmark's machine-readable artifact and return its path.
+
+    The single naming convention for the suite: ``BENCH_{name}.json`` at the
+    repo root, with a ``_tiny`` suffix when ``tiny=True`` so a CI smoke run
+    never clobbers a committed full-run measurement.  ``path`` overrides the
+    convention for artifacts whose location is derived from an input file
+    (roofline).  Serialization matches the historical hand-rolled writers
+    byte-for-byte: ``json.dumps(payload, indent=...)`` with no trailing
+    newline.
+    """
+    if path is None:
+        suffix = "_tiny" if tiny else ""
+        path = Path(__file__).resolve().parent.parent / f"BENCH_{name}{suffix}.json"
+    else:
+        path = Path(path)
+    path.write_text(json.dumps(payload, indent=indent))
+    print(f"wrote {path.name}")
+    return path

@@ -20,18 +20,22 @@ DiskSpec + ComputeSpec time (admission prefill seconds + pipelined decode
 seconds).  The continuous arm must win on both nvme and emmc or this
 benchmark fails the run.
 
-    PYTHONPATH=src python -m benchmarks.continuous_serving [--tiny]
+    PYTHONPATH=src python -m benchmarks.continuous_serving [--tiny] \
+        [--trace obs_trace.json]
+
+``--trace PATH`` attaches an :class:`repro.obs.Observability` handle to the
+first continuous run and exports its dual-clock Perfetto trace to PATH —
+the artifact CI uploads from the tiny smoke.
 """
 
 from __future__ import annotations
 
 import argparse
 import dataclasses
-import json
-from pathlib import Path
 
-import benchmarks.common  # noqa: F401  (src/ path bootstrap)
 import numpy as np
+
+from benchmarks.common import write_bench_json  # noqa: F401  (src/ bootstrap)
 
 
 def build_model():
@@ -61,16 +65,17 @@ def build_trace(rng, *, n_requests, prompt_lo, prompt_hi, gen_lo, gen_hi,
     return reqs
 
 
-def _session(cfg, params, ecfg, slots, calib):
+def _session(cfg, params, ecfg, slots, calib, obs=None):
     from repro.models.transformer import TransformerAdapter
     from repro.serving.api import ServeSession
 
     return ServeSession(TransformerAdapter(cfg), params, ecfg, slots=slots,
-                        calib_k=calib)
+                        calib_k=calib, obs=obs)
 
 
-def run_continuous(cfg, params, ecfg, slots, calib, trace, prompts) -> dict:
-    with _session(cfg, params, ecfg, slots, calib) as sess:
+def run_continuous(cfg, params, ecfg, slots, calib, trace, prompts,
+                   obs=None) -> dict:
+    with _session(cfg, params, ecfg, slots, calib, obs=obs) as sess:
         for r, p in zip(trace, prompts):
             sess.submit(p, r["max_new"], arrival=r["arrival"])
         done = sess.drain()
@@ -106,8 +111,9 @@ def run_static(cfg, params, ecfg, slots, calib, trace, prompts) -> dict:
                 "decode_steps": len(sess.engine.step_log)}
 
 
-def main(tiny: bool = False) -> None:
+def main(tiny: bool = False, trace_path: str | None = None) -> None:
     from repro.core.engine import EngineConfig
+    from repro.obs import Observability
 
     cfg, params = build_model()
     rng = np.random.default_rng(0)
@@ -139,9 +145,15 @@ def main(tiny: bool = False) -> None:
            "mean_interarrival_s": mean_interarrival, "disks": {}}
     print("disk,arm,goodput_tok_s,makespan_s,read_MB,decode_steps")
     ok = True
+    obs = Observability() if trace_path else None
     for disk in ("nvme", "emmc"):
         dcfg = dataclasses.replace(ecfg, disk=disk)
-        cont = run_continuous(cfg, params, dcfg, slots, calib, trace, prompts)
+        cont = run_continuous(cfg, params, dcfg, slots, calib, trace, prompts,
+                              obs=obs)
+        if obs is not None:       # trace the first continuous run only
+            obs.export_trace(trace_path)
+            print(f"wrote {trace_path}")
+            obs = None
         stat = run_static(cfg, params, dcfg, slots, calib, trace, prompts)
         speedup = cont["goodput"] / stat["goodput"]
         out["disks"][disk] = {"continuous": cont, "static": stat,
@@ -152,11 +164,7 @@ def main(tiny: bool = False) -> None:
         print(f"{disk},speedup,{speedup:.2f}x,,,")
         ok &= speedup > 1.0
 
-    artifact = Path(__file__).resolve().parent.parent / (
-        "BENCH_continuous_serving_tiny.json" if tiny
-        else "BENCH_continuous_serving.json")
-    artifact.write_text(json.dumps(out, indent=2))
-    print(f"wrote {artifact.name}")
+    write_bench_json("continuous_serving", out, tiny=tiny)
     if not ok:
         raise SystemExit("continuous batching did not beat the static "
                          "batcher on every disk")
@@ -166,4 +174,8 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--tiny", action="store_true",
                     help="CI smoke mode: small trace")
-    main(tiny=ap.parse_args().tiny)
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="export a Perfetto trace of the first continuous "
+                         "run to PATH")
+    args = ap.parse_args()
+    main(tiny=args.tiny, trace_path=args.trace)

@@ -25,11 +25,11 @@ Usage::
 from __future__ import annotations
 
 import argparse
-import json
 
-import benchmarks.common  # noqa: F401  (sys.path side effect)
 import jax
 import numpy as np
+
+from benchmarks.common import write_bench_json  # noqa: F401  (src/ bootstrap)
 
 from repro.core.engine import EngineConfig, KVSwapEngine
 from repro.models.transformer import ModelConfig, TransformerAdapter, init_params
@@ -72,6 +72,10 @@ def run_one(adapter, params, prompt, calib, *, disk: str, async_io: bool,
             "pipelined_ms": rep["pipelined_seconds"] * 1e3,
             "h2d_kb": rep["h2d_bytes"] / 1024,
             "reuse_hit_rate": eng.reuse_ratio(),
+            # prefetch quality (1-step lookahead, ROADMAP item 4 baseline)
+            "pred_precision": rep["pred_precision"],
+            "pred_recall": rep["pred_recall"],
+            "stale_group_rate": rep["stale_group_rate"],
         }
     return toks, row
 
@@ -144,14 +148,9 @@ def main(tiny: bool = False, steps: int | None = None) -> dict:
           f"h2d_reduction={bytes_reduction:.1%}  "
           f"hit_rate={dev['reuse_hit_rate']:.1%}")
 
-    # tiny (the CI smoke) writes its own artifact so a local smoke run never
-    # clobbers the committed full-run measurement
-    name = "BENCH_decode_hotpath_tiny.json" if tiny else "BENCH_decode_hotpath.json"
     out = {"model": cfg.name, "prompt_len": prompt_len, "steps": steps,
            "batch": batch, "engine": ecfg_kw, "results": rows, "summary": summary}
-    with open(name, "w") as f:
-        json.dump(out, f, indent=2)
-    print(f"wrote {name}")
+    write_bench_json("decode_hotpath", out, tiny=tiny)
 
     if not tiny:   # timing asserts are too noisy for the CI smoke
         assert dev["wall_median_ms"] < host["wall_median_ms"], \

@@ -22,7 +22,7 @@ from __future__ import annotations
 import json
 import os
 
-from benchmarks.common import Timer, emit
+from benchmarks.common import Timer, emit, write_bench_json
 
 PEAK = 197e12
 HBM = 819e9
@@ -116,9 +116,9 @@ def main(path: str = DEFAULT_PATH) -> str:
             records = json.load(f)
         rows = analyze(records)
         print_table(rows)
-        out_path = path.replace(".json", "_roofline.json")
-        with open(out_path, "w") as f:
-            json.dump(rows, f, indent=1)
+        write_bench_json("roofline", rows,
+                         path=path.replace(".json", "_roofline.json"),
+                         indent=1)
     ok = [r for r in rows if r["ok"]]
     doms = {d: sum(1 for r in ok if r["dominant"] == d)
             for d in ("compute", "memory", "collective")}

@@ -38,11 +38,10 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import json
-from pathlib import Path
 
-import benchmarks.common  # noqa: F401  (src/ path bootstrap)
 import numpy as np
+
+from benchmarks.common import write_bench_json  # noqa: F401  (src/ bootstrap)
 
 EPS = 1e-9
 
@@ -250,10 +249,7 @@ def main(tiny: bool = False) -> None:
 
     failures = check_invariants(out, disks)
     out["invariants_ok"] = not failures
-    artifact = Path(__file__).resolve().parent.parent / (
-        "BENCH_slo_trace_tiny.json" if tiny else "BENCH_slo_trace.json")
-    artifact.write_text(json.dumps(out, indent=2))
-    print(f"wrote {artifact.name}")
+    write_bench_json("slo_trace", out, tiny=tiny)
     if failures:
         raise SystemExit("SLO invariants failed:\n  " + "\n  ".join(failures))
 

@@ -32,11 +32,11 @@ Usage::
 from __future__ import annotations
 
 import argparse
-import json
 
-import benchmarks.common  # noqa: F401  (sys.path side effect)
 import jax
 import numpy as np
+
+from benchmarks.common import write_bench_json  # noqa: F401  (src/ bootstrap)
 
 from repro.core.engine import EngineConfig, KVSwapEngine
 from repro.models.transformer import ModelConfig, TransformerAdapter, init_params
@@ -131,13 +131,10 @@ def main(tiny: bool = False, steps: int | None = None) -> dict:
               f"step_speedup={summary[d]['step_speedup']:.2f}x "
               f"warm_hit_rate={on['warm_hit_rate']:.1%}")
 
-    name = "BENCH_warm_tier_tiny.json" if tiny else "BENCH_warm_tier.json"
     out = {"model": cfg.name, "prompt_len": prompt_len, "steps": steps,
            "batch": batch, "engine": ecfg_kw, "warm_budget_bytes": budget,
            "kv_bits": 8, "results": rows, "summary": summary}
-    with open(name, "w") as f:
-        json.dump(out, f, indent=2)
-    print(f"wrote {name}")
+    write_bench_json("warm_tier", out, tiny=tiny)
 
     if not tiny:
         # the modeled median step latency is deterministic (DiskSpec +

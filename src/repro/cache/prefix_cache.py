@@ -97,6 +97,7 @@ class PrefixCache:
         self.scheduler = ReadScheduler(max_gap=cfg.coalesce_gap)
         self.stats = PrefixCacheStats()
         self._accountant = accountant
+        self._obs = None
         if cfg.dir:
             os.makedirs(cfg.dir, exist_ok=True)
             mpath = self._manifest_path()
@@ -165,6 +166,30 @@ class PrefixCache:
         if self.store is not None:
             self.store.accountant = accountant
 
+    def use_obs(self, obs) -> None:
+        """Record subsequent lookups/restores into an
+        :class:`~repro.obs.Observability` handle (same engine-agnostic
+        attach pattern as :meth:`use_accountant`): restore spans on the
+        ``prefix-cache`` lane plus lookup/match/restore/publish counters
+        mirroring :class:`PrefixCacheStats`."""
+        self._obs = obs if (obs is not None and obs.enabled) else None
+        if self._obs is not None:
+            c = self._obs.registry.counter
+            self._m = {
+                "lookups": c("kvswap_prefix_lookups_total",
+                             "prefix-cache longest-prefix matches attempted"),
+                "lookup_tokens": c("kvswap_prefix_lookup_tokens_total",
+                                   "prompt tokens offered for matching"),
+                "matched_tokens": c("kvswap_prefix_matched_tokens_total",
+                                    "prompt tokens served from cached blocks"),
+                "restored_tokens": c("kvswap_prefix_restored_tokens_total",
+                                     "KV tokens restored via read_chain"),
+                "published_blocks": c("kvswap_prefix_published_blocks_total",
+                                      "blocks newly published"),
+                "dedup_blocks": c("kvswap_prefix_dedup_blocks_total",
+                                  "publishes deduplicated by content hash"),
+            }
+
     # -- lookup -----------------------------------------------------------
     def match(self, tokens: np.ndarray, *, max_tokens: int | None = None
               ) -> list[BlockMeta]:
@@ -177,11 +202,14 @@ class PrefixCache:
         first.
         """
         self.stats.lookups += 1
+        if self._obs is not None:
+            self._m["lookups"].inc()
         out: list[BlockMeta] = []
         if self.manifest is None:
             return out
         chain = chain_blocks(tokens, self.cfg.block_tokens)
-        self.stats.lookup_tokens += sum(b.n_tokens for b in chain)
+        offered = sum(b.n_tokens for b in chain)
+        self.stats.lookup_tokens += offered
         for blk in chain:
             meta = self.manifest.blocks.get(blk.block_id)
             if meta is None:
@@ -192,7 +220,11 @@ class PrefixCache:
                 out.pop()
         for meta in reversed(out):
             self.manifest.touch(meta)
-        self.stats.matched_tokens += sum(m.n_tokens for m in out)
+        matched = sum(m.n_tokens for m in out)
+        self.stats.matched_tokens += matched
+        if self._obs is not None:
+            self._m["lookup_tokens"].inc(offered)
+            self._m["matched_tokens"].inc(matched)
         return out
 
     def contains(self, block_id: str) -> bool:
@@ -204,6 +236,8 @@ class PrefixCache:
         if meta is not None:
             self.manifest.touch(meta)
             self.stats.dedup_blocks += 1
+            if self._obs is not None:
+                self._m["dedup_blocks"].inc()
 
     # -- pinning ----------------------------------------------------------
     def pin(self, metas: list[BlockMeta]) -> None:
@@ -229,12 +263,22 @@ class PrefixCache:
         extents = [(m.start_group, m.n_groups) for m in metas]
         n_tok = sum(m.n_tokens for m in metas)
         hkv, d = geo.n_kv_heads, geo.head_dim
+        obs = self._obs
+        if obs is not None:
+            r0 = obs.tracer.now_wall()
         k = np.empty((geo.n_layers, n_tok, hkv, d), dtype=geo.np_dtype)
         v = np.empty_like(k)
         for layer in range(geo.n_layers):
             kl, vl = self.store.read_extents(layer, extents, self.scheduler)
             k[layer] = kl.reshape(-1, hkv, d)
             v[layer] = vl.reshape(-1, hkv, d)
+        if obs is not None:
+            obs.tracer.add(
+                "restore_chain", "prefix-cache", cat="prefix",
+                wall_t0=r0, wall_dur=obs.tracer.now_wall() - r0,
+                args={"blocks": len(metas), "tokens": n_tok,
+                      "layers": geo.n_layers})
+            self._m["restored_tokens"].inc(n_tok)
         return k, v
 
     # -- publish ----------------------------------------------------------
@@ -252,6 +296,8 @@ class PrefixCache:
         if existing is not None:
             self.manifest.touch(existing)
             self.stats.dedup_blocks += 1
+            if self._obs is not None:
+                self._m["dedup_blocks"].inc()
             return True
         if block.parent_id != "root" and block.parent_id not in self.manifest.blocks:
             raise ValueError(f"parent {block.parent_id} of block "
@@ -284,6 +330,8 @@ class PrefixCache:
             start_group=start, n_groups=ng, last_used=self.manifest.tick())
         self.manifest.blocks[meta.block_id] = meta
         self.stats.published_blocks += 1
+        if self._obs is not None:
+            self._m["published_blocks"].inc()
         return True
 
     def _evict(self, victims: list[BlockMeta]) -> None:

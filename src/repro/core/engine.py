@@ -78,6 +78,7 @@ from repro.core.predictor import PredictorConfig
 from repro.core.reuse_buffer import ReuseBuffer
 from repro.core.rolling_buffer import RollingBuffer
 from repro.io import DoubleBuffer, PrefetchWorker, ReadScheduler
+from repro.obs import NULL_OBS, PrefetchQualityMeter
 from repro.utils import stats as stats_util
 
 
@@ -174,11 +175,41 @@ class StepStats:
     io_wait_seconds: float = 0.0     # measured wall time blocked on fetches
     h2d_bytes: int = 0               # host→device KV payload bytes this step
     active_rows: int = 0             # rows decoded this step (continuous batching)
+    # prefetch quality (repro.obs.quality): pooled integer counts over this
+    # step's (layer, row) selections, scored as 1-step lookahead against the
+    # previous step's selections.  Ratios of sums aggregate correctly across
+    # steps, so the counts are stored and the ratios derived.
+    pred_shared_groups: int = 0      # |prev ∩ cur| summed over (layer, row)
+    pred_prev_groups: int = 0        # |prev| summed over (layer, row)
+    pred_cur_groups: int = 0         # |cur| summed over (layer, row)
+    stale_groups: int = 0            # reuse-resident but unselected this step
+    resident_groups: int = 0         # reuse-resident at selection time
 
     @property
     def overlap_saved_seconds(self) -> float:
         """Modeled time the pipeline hides: serial − pipelined."""
         return max(0.0, self.io_seconds + self.compute_seconds - self.pipelined_seconds)
+
+    @property
+    def pred_precision(self) -> float:
+        """Of last step's selection, the fraction re-selected this step —
+        what a 1-step lookahead prefetcher's precision would have been."""
+        return self.pred_shared_groups / self.pred_prev_groups \
+            if self.pred_prev_groups else 0.0
+
+    @property
+    def pred_recall(self) -> float:
+        """Of this step's selection, the fraction last step's selection
+        already covered — a lookahead prefetcher's recall."""
+        return self.pred_shared_groups / self.pred_cur_groups \
+            if self.pred_cur_groups else 0.0
+
+    @property
+    def stale_group_rate(self) -> float:
+        """Of the groups resident in the reuse buffers at selection time,
+        the fraction this step did not select (reclaimable dead weight)."""
+        return self.stale_groups / self.resident_groups \
+            if self.resident_groups else 0.0
 
 
 def summarize_steps(steps: Sequence[StepStats]) -> dict:
@@ -200,6 +231,13 @@ def summarize_steps(steps: Sequence[StepStats]) -> dict:
     n = len(steps)
     mean = lambda f: sum(f(s) for s in steps) / n
     tails = stats_util.percentiles([s.pipelined_seconds for s in steps])
+    # prefetch quality pooled over the window: ratios of summed counts, not
+    # means of per-step ratios (sparse steps would otherwise be overweighted)
+    shared = sum(s.pred_shared_groups for s in steps)
+    prev = sum(s.pred_prev_groups for s in steps)
+    cur = sum(s.pred_cur_groups for s in steps)
+    stale = sum(s.stale_groups for s in steps)
+    resident = sum(s.resident_groups for s in steps)
     return {
         "io_seconds": mean(lambda s: s.io_seconds),
         "compute_seconds": mean(lambda s: s.compute_seconds),
@@ -210,6 +248,9 @@ def summarize_steps(steps: Sequence[StepStats]) -> dict:
         "h2d_bytes": mean(lambda s: s.h2d_bytes),
         "active_rows": mean(lambda s: s.active_rows),
         "warm_bytes": mean(lambda s: s.warm_bytes),
+        "pred_precision": shared / prev if prev else 0.0,
+        "pred_recall": shared / cur if cur else 0.0,
+        "stale_group_rate": stale / resident if resident else 0.0,
         **{f"step_seconds_{k}": v for k, v in tails.items()},
     }
 
@@ -255,11 +296,17 @@ class KVSwapEngine:
         batch: int,
         adapter: LowRankAdapter | None = None,
         calib_k: np.ndarray | None = None,
+        obs=None,
     ):
         self.model = model
         self.params = params
         self.cfg = cfg
         self.batch = batch
+        # observability handle (repro.obs.Observability), passed alongside —
+        # never inside — the frozen, asdict-serialized EngineConfig.  The
+        # shared NULL_OBS default keeps every hot-path guard to one
+        # attribute load + bool test.
+        self.obs = obs if obs is not None else NULL_OBS
         if adapter is None:
             if calib_k is None:
                 raise ValueError("need a fitted LowRankAdapter or calibration K")
@@ -278,6 +325,28 @@ class KVSwapEngine:
         self._kv_index = {layer: j for j, layer in enumerate(self.kv_layers)}
         n_kv_layers = len(self.kv_layers)
         self.accountant = IOAccountant(cfg.disk_spec)
+        if self.obs.enabled:
+            # mirror every I/O charge into the registry inside the
+            # accountant's lock: registry totals stay bit-equal to
+            # IOAccountant.snapshot() even with worker threads charging
+            self.accountant.bind_metrics(self.obs.registry)
+            reg = self.obs.registry
+            self._m_steps = reg.counter(
+                "kvswap_engine_decode_steps_total", "decode steps executed")
+            self._m_tokens = reg.counter(
+                "kvswap_engine_decode_tokens_total",
+                "tokens decoded (active rows per step)")
+            self._m_admissions = reg.counter(
+                "kvswap_engine_admissions_total",
+                "prefills + per-slot admissions")
+            self._m_prefill_tokens = reg.counter(
+                "kvswap_engine_prefill_tokens_total",
+                "prompt tokens computed by prefill (cached tokens excluded)")
+            self._m_hist_pipe = reg.histogram(
+                "kvswap_step_pipelined_seconds",
+                "modeled layer-pipelined decode-step latency")
+            self._m_hist_wall = reg.histogram(
+                "kvswap_step_wall_seconds", "measured decode-step wall time")
         self.compute_spec = hardware.COMPUTES.get(cfg.compute, hardware.TPU_V5E)
         self.store = KVDiskStore(
             n_layers=n_kv_layers, batch=batch, max_groups=self.max_groups,
@@ -311,11 +380,13 @@ class KVSwapEngine:
 
             self.warm = WarmTier(budget_bytes=cfg.warm_budget_bytes,
                                  compute=self.compute_spec,
-                                 accountant=self.accountant)
+                                 accountant=self.accountant,
+                                 obs=self.obs)
             self.store.warm = self.warm
         self.managers = [
             KVCacheManager(store=self.store, reuse=self.reuse[j], rolling=self.rolling[j],
-                           layer=j, scheduler=self.scheduler, warm=self.warm)
+                           layer=j, scheduler=self.scheduler, warm=self.warm,
+                           obs=self.obs)
             for j in range(n_kv_layers)
         ]
         self.prefetcher: PrefetchWorker | None = None
@@ -324,7 +395,12 @@ class KVSwapEngine:
                 self._fetch_table, n_threads=cfg.io_threads,
                 max_pending=max(4, 2 * max(n_kv_layers, 1)),
                 accountant=self.accountant,
+                obs=self.obs,
             )
+        # prefetch-quality meter: always on (host-side set arithmetic, pure
+        # observation) — its counts feed StepStats / summarize_steps and the
+        # benchmarks, with or without an obs handle
+        self.quality = PrefetchQualityMeter()
         # recurrent state for non-KV (SSM / xLSTM) layers
         self.states: dict[int, object] = {}
         # Preallocated compressed K cache, one per KV layer: [B, cap_tokens, r]
@@ -443,6 +519,25 @@ class KVSwapEngine:
             "wall_seconds": wall,
         }
         self.admit_log.append(dict(self.prefill_report))
+        self._obs_admission("prefill", self.prefill_report)
+
+    def _obs_admission(self, name: str, rep: dict) -> None:
+        """Admission span on both clocks + admission counters.  Advances the
+        modeled-clock cursor by the admission's modeled seconds, so the next
+        decode-step span starts where this one ends."""
+        obs = self.obs
+        if not obs.enabled:
+            return
+        t0, _ = obs.advance_model(rep["modeled_seconds"])
+        obs.tracer.add(
+            name, "engine-step", cat="admission",
+            wall_t0=max(0.0, obs.tracer.now_wall() - rep["wall_seconds"]),
+            wall_dur=rep["wall_seconds"],
+            model_t0=t0, model_dur=rep["modeled_seconds"],
+            args={k: rep[k] for k in ("prompt_tokens", "cached_tokens", "row")
+                  if k in rep})
+        self._m_admissions.inc()
+        self._m_prefill_tokens.inc(rep["computed_tokens"])
 
     def _spill_prefill_layer(self, j: int, k_np: np.ndarray, v_np: np.ndarray,
                              k_dev: jax.Array, s: int) -> None:
@@ -538,6 +633,7 @@ class KVSwapEngine:
                    n_kv_heads=self.model.n_kv_heads,
                    head_dim=self.model.head_dim, dtype=self.cfg.np_dtype)
         cache.use_accountant(self.accountant)
+        cache.use_obs(self.obs)
         chains = [cache.match(tokens_np[bi], max_tokens=s - 1) for bi in range(b)]
         n_cached = min(sum(m.n_tokens for m in ch) for ch in chains)
         if n_cached == 0:
@@ -634,6 +730,7 @@ class KVSwapEngine:
                            n_kv_heads=self.model.n_kv_heads,
                            head_dim=self.model.head_dim, dtype=self.cfg.np_dtype)
                 cache.use_accountant(self.accountant)
+                cache.use_obs(self.obs)
                 chain = cache.match(tokens_np, max_tokens=s - 1)
                 n_cached = sum(m.n_tokens for m in chain)
                 if n_cached:
@@ -696,6 +793,7 @@ class KVSwapEngine:
             "row": bi,
         }
         self.admit_log.append(dict(self.prefill_report))
+        self._obs_admission("admit_row", self.prefill_report)
         return logits
 
     def retire_row(self, bi: int) -> None:
@@ -718,6 +816,9 @@ class KVSwapEngine:
         for j in range(len(self.kv_layers)):
             self.managers[j].free_row(bi)
         self.store.free_row(bi)
+        # forget the slot's selection history: a recycled slot's first step
+        # must not score against the previous tenant's selections
+        self.quality.clear_row(bi)
         self.row_seq[bi] = 0
         self.row_valid[bi] = 0
 
@@ -750,6 +851,7 @@ class KVSwapEngine:
                    n_kv_heads=self.model.n_kv_heads,
                    head_dim=self.model.head_dim, dtype=self.cfg.np_dtype)
         cache.use_accountant(self.accountant)
+        cache.use_obs(self.obs)
         bt = cache.cfg.block_tokens
         nkv = len(self.kv_layers)
         hkv, hd = self.model.n_kv_heads, self.model.head_dim
@@ -814,6 +916,7 @@ class KVSwapEngine:
         warm_bytes0 = self.accountant.warm_bytes
         self._h2d_step = 0
         self._step_active = active
+        self.quality.begin_step()
         b = self.batch
         if n_active == b:
             tok = jnp.asarray(token_ids).reshape(b, 1)   # stays on device
@@ -851,9 +954,60 @@ class KVSwapEngine:
         stats.io_wait_seconds = io_wait
         stats.h2d_bytes = self._h2d_step
         stats.active_rows = n_active
+        qc = self.quality.finish_step()
+        stats.pred_shared_groups = qc.shared_groups
+        stats.pred_prev_groups = qc.prev_groups
+        stats.pred_cur_groups = qc.cur_groups
+        stats.stale_groups = qc.stale_groups
+        stats.resident_groups = qc.resident_groups
         stats.wall_seconds = time.perf_counter() - t0
         self.step_log.append(stats)
+        if self.obs.enabled:
+            self._obs_step(stats, t_compute, t_io)
         return self.model.logits(self.params, x)
+
+    def _obs_step(self, stats: StepStats, t_compute: Sequence[float],
+                  t_io: Sequence[float]) -> None:
+        """Decode-step spans on both clocks + per-step metrics.
+
+        The per-layer modeled lanes replay the :meth:`_pipeline_latency`
+        recurrence, so the ``compute`` and ``io`` bars land exactly where
+        the latency model says they do — layer *i+1*'s I/O bar visibly
+        hiding under layer *i*'s compute bar is the paper's §3.3 overlap,
+        straight from the trace.  The ``decode_step`` span name on the
+        ``engine-step`` lane is load-bearing: :func:`repro.obs.report.
+        overlap_summary` filters on it to exclude admission spans.
+        """
+        obs = self.obs
+        tr = obs.tracer
+        t0, _ = obs.advance_model(stats.pipelined_seconds)
+        tr.add("decode_step", "engine-step", cat="decode",
+               wall_t0=max(0.0, tr.now_wall() - stats.wall_seconds),
+               wall_dur=stats.wall_seconds,
+               model_t0=t0, model_dur=stats.pipelined_seconds,
+               args={"active_rows": stats.active_rows,
+                     "io_seconds": stats.io_seconds,
+                     "compute_seconds": stats.compute_seconds,
+                     "io_wait_seconds": stats.io_wait_seconds})
+        L = len(t_compute)
+        t = t0
+        if t_io:
+            if t_io[0] > 0:
+                tr.add("io L0", "io", cat="io", model_t0=t, model_dur=t_io[0])
+            t += t_io[0]
+        for i in range(L):
+            nxt = t_io[i + 1] if i + 1 < L else 0.0
+            if t_compute[i] > 0:
+                tr.add(f"compute L{i}", "compute", cat="compute",
+                       model_t0=t, model_dur=t_compute[i])
+            if nxt > 0:
+                tr.add(f"io L{i + 1}", "io", cat="io",
+                       model_t0=t, model_dur=nxt)
+            t += max(t_compute[i], nxt)
+        self._m_steps.inc()
+        self._m_tokens.inc(stats.active_rows)
+        self._m_hist_pipe.observe(stats.pipelined_seconds)
+        self._m_hist_wall.observe(stats.wall_seconds)
 
     def _reset_device_state(self) -> None:
         """Drop the device mirrors and tails (called on re-prefill) so stale
@@ -893,9 +1047,20 @@ class KVSwapEngine:
         here, just before the fetch needs it.  Inactive rows are masked out
         on host — they select no groups, so the fetch issues no disk reads
         for them (the active-row contract of continuous batching)."""
+        obs = self.obs
+        if obs.enabled:
+            p0 = obs.tracer.now_wall()
         q_pred = self.model.predict_query(self.params, layer, pred_src, pos)
         ids, mask = jax.device_get(self._predict(j, q_pred, valid))
-        return ids, mask & self._step_active[:, None]
+        masked = mask & self._step_active[:, None]
+        # score the selection for prefetch quality (main thread in both
+        # modes: async predicts before submitting the fetch, so layer j's
+        # reuse buffer is quiescent here)
+        self.quality.observe(layer, ids, masked, self.reuse[j])
+        if obs.enabled:
+            obs.tracer.add(f"predict L{layer}", f"layer{layer}", cat="predict",
+                           wall_t0=p0, wall_dur=obs.tracer.now_wall() - p0)
+        return ids, masked
 
     def _state_layer(self, layer: int, x: jax.Array, pos: jax.Array,
                      t_compute: list[float]) -> jax.Array:
@@ -910,11 +1075,20 @@ class KVSwapEngine:
 
     def _kv_layer(self, layer: int, j: int, x: jax.Array, pos: jax.Array, table,
                   t_compute: list[float], flush_rows: list) -> jax.Array:
+        obs = self.obs
+        if obs.enabled:
+            a0 = obs.tracer.now_wall()
         if self.device_resident:
-            return self._kv_layer_device(layer, j, x, pos, table, t_compute,
-                                         flush_rows)
-        return self._kv_layer_host(layer, j, x, pos, table, t_compute,
-                                   flush_rows)
+            x = self._kv_layer_device(layer, j, x, pos, table, t_compute,
+                                      flush_rows)
+        else:
+            x = self._kv_layer_host(layer, j, x, pos, table, t_compute,
+                                    flush_rows)
+        if obs.enabled:
+            obs.tracer.add(f"attn L{layer}", f"layer{layer}", cat="attn",
+                           wall_t0=a0, wall_dur=obs.tracer.now_wall() - a0,
+                           args={"modeled_compute_s": t_compute[-1]})
+        return x
 
     def _kv_layer_host(self, layer: int, j: int, x: jax.Array, pos: jax.Array,
                        table, t_compute: list[float], flush_rows: list) -> jax.Array:
@@ -1032,9 +1206,17 @@ class KVSwapEngine:
             w0 = time.perf_counter()
             with self.accountant.track() as tr:
                 table = self.managers[j].fetch(ids, mask)
-            io_wait += time.perf_counter() - w0
+            dt = time.perf_counter() - w0
+            io_wait += dt
             # the fetch-serve lane: disk reads plus warm-tier memcpy+dequant
             t_io.append(tr.read_seconds + tr.warm_seconds)
+            if self.obs.enabled:
+                self.obs.tracer.add(
+                    f"fetch L{layer}", f"layer{layer}", cat="fetch",
+                    wall_t0=self.obs.tracer.now_wall() - dt, wall_dur=dt,
+                    args={"modeled_io_s": tr.read_seconds + tr.warm_seconds,
+                          "read_bytes": tr.read_bytes,
+                          "warm_bytes": tr.warm_bytes})
             x_prev = x
             x = self._kv_layer(layer, j, x, pos, table, t_compute, flush_rows)
         return x, io_wait
@@ -1071,8 +1253,16 @@ class KVSwapEngine:
                 j = self._kv_index[layer]
                 w0 = time.perf_counter()
                 res = buf.take(j)
-                io_wait += time.perf_counter() - w0
+                dt = time.perf_counter() - w0
+                io_wait += dt
                 t_io.append(res.io_seconds)
+                if self.obs.enabled:
+                    # the wall time *exposed* by this layer's fetch — the
+                    # worker records the fetch itself on its own lane
+                    self.obs.tracer.add(
+                        f"wait L{layer}", f"layer{layer}", cat="fetch",
+                        wall_t0=self.obs.tracer.now_wall() - dt, wall_dur=dt,
+                        args={"modeled_io_s": res.io_seconds})
                 x = self._kv_layer(layer, j, x, pos, res.table, t_compute, flush_rows)
         except BaseException:
             buf.drain()   # never leave staged futures behind on an error

@@ -59,7 +59,8 @@ class KVCacheManager:
     """
 
     def __init__(self, *, store: KVDiskStore, reuse: ReuseBuffer, rolling: RollingBuffer,
-                 layer: int, scheduler: ReadScheduler | None = None, warm=None):
+                 layer: int, scheduler: ReadScheduler | None = None, warm=None,
+                 obs=None):
         self.store = store
         self.reuse = reuse
         self.rolling = rolling
@@ -71,6 +72,21 @@ class KVCacheManager:
         self.warm = warm
         if warm is not None:
             reuse.victim_sink = self._demote
+        # observability: ReadScheduler run-plan counters.  The scheduler
+        # itself stays pure (it only plans); its per-plan stats() summary is
+        # published here, at the call site that executes the plan.
+        self._obs = obs
+        if obs is not None and obs.enabled:
+            reg = obs.registry
+            self._m_plan_requests = reg.counter(
+                "kvswap_read_plan_requests_total",
+                "coalesced sequential runs planned by ReadScheduler")
+            self._m_plan_groups = reg.counter(
+                "kvswap_read_plan_groups_read_total",
+                "groups read by planned runs (requested + gap)")
+            self._m_plan_wasted = reg.counter(
+                "kvswap_read_plan_groups_wasted_total",
+                "gap groups read through but not requested")
 
     def _demote(self, batch_idx: int, gid: int, kv: np.ndarray) -> None:
         """Reuse-buffer eviction → warm-tier admission.  With an int8 disk
@@ -122,7 +138,13 @@ class KVCacheManager:
                     else:
                         new_groups.append((bi, slot, kv_flat))
                 misses = disk_misses
-            for run in self.scheduler.plan(misses):
+            plan = self.scheduler.plan(misses)
+            if plan and self._obs is not None and self._obs.enabled:
+                st = self.scheduler.stats(plan)
+                self._m_plan_requests.inc(st["requests"])
+                self._m_plan_groups.inc(st["groups_read"])
+                self._m_plan_wasted.inc(st["groups_wasted"])
+            for run in plan:
                 k_r, v_r = self.store.read_run(self.layer, bi, run.start, run.count)
                 for gid in run.ids:
                     off = gid - run.start

@@ -134,7 +134,43 @@ class IOAccountant:
         self.spec = spec
         self._lock = threading.Lock()
         self._local = threading.local()
+        self._metrics: dict | None = None
         self.reset()
+
+    def bind_metrics(self, registry) -> None:
+        """Mirror every charge into ``kvswap_io_*`` counters of a
+        :class:`~repro.obs.metrics.MetricsRegistry`.
+
+        The mirror increments happen *inside* this accountant's lock, so
+        the counters accumulate the identical float sequence in the
+        identical order as the fields — registry totals are bit-equal to
+        :meth:`snapshot`, even with worker threads charging concurrently.
+        :meth:`reset` zeroes the bound counters in the same critical
+        section, preserving the equality invariant across engine resets.
+        """
+        c = registry.counter
+        with self._lock:
+            self._metrics = {
+                "read_bytes": c("kvswap_io_read_bytes_total",
+                                "bytes read from the disk tier"),
+                "read_requests": c("kvswap_io_read_requests_total",
+                                   "disk read requests issued"),
+                "read_seconds": c("kvswap_io_read_seconds_total",
+                                  "modeled disk read seconds"),
+                "write_bytes": c("kvswap_io_write_bytes_total",
+                                 "bytes written to the disk tier"),
+                "write_requests": c("kvswap_io_write_requests_total",
+                                    "disk write requests issued"),
+                "write_seconds": c("kvswap_io_write_seconds_total",
+                                   "modeled disk write seconds"),
+                "warm_bytes": c("kvswap_warm_served_bytes_total",
+                                "bytes served by the warm tier "
+                                "(disk-read units)"),
+                "warm_requests": c("kvswap_warm_served_requests_total",
+                                   "warm-tier serves"),
+                "warm_seconds": c("kvswap_warm_served_seconds_total",
+                                  "modeled warm-tier serve seconds"),
+            }
 
     def reset(self) -> None:
         with self._lock:
@@ -147,6 +183,9 @@ class IOAccountant:
             self.warm_bytes = 0
             self.warm_requests = 0
             self.warm_seconds = 0.0
+            if self._metrics is not None:
+                for m in self._metrics.values():
+                    m._reset()
 
     @contextlib.contextmanager
     def track(self):
@@ -172,6 +211,11 @@ class IOAccountant:
             self.read_bytes += n_bytes
             self.read_requests += n_requests
             self.read_seconds += t
+            m = self._metrics
+            if m is not None:
+                m["read_bytes"].inc(n_bytes)
+                m["read_requests"].inc(n_requests)
+                m["read_seconds"].inc(t)
         for tr in self._trackers():
             tr.read_bytes += n_bytes
             tr.read_requests += n_requests
@@ -184,6 +228,11 @@ class IOAccountant:
             self.write_bytes += n_bytes
             self.write_requests += n_requests
             self.write_seconds += t
+            m = self._metrics
+            if m is not None:
+                m["write_bytes"].inc(n_bytes)
+                m["write_requests"].inc(n_requests)
+                m["write_seconds"].inc(t)
         for tr in self._trackers():
             tr.write_bytes += n_bytes
             tr.write_requests += n_requests
@@ -200,6 +249,11 @@ class IOAccountant:
             self.warm_bytes += n_bytes
             self.warm_requests += n_requests
             self.warm_seconds += seconds
+            m = self._metrics
+            if m is not None:
+                m["warm_bytes"].inc(n_bytes)
+                m["warm_requests"].inc(n_requests)
+                m["warm_seconds"].inc(seconds)
         for tr in self._trackers():
             tr.warm_bytes += n_bytes
             tr.warm_requests += n_requests

@@ -89,6 +89,7 @@ class PrefetchWorker:
         max_pending: int = 64,
         accountant=None,
         name: str = "kvswap-prefetch",
+        obs=None,
     ):
         if n_threads < 1:
             raise ValueError("need at least one worker thread")
@@ -96,6 +97,10 @@ class PrefetchWorker:
             raise ValueError("max_pending must be >= 1")
         self._fetch_fn = fetch_fn
         self._accountant = accountant
+        # observability: each worker thread records its serviced fetches as
+        # wall spans on its own lane (the thread's name), which is where the
+        # measured overlap — worker lanes busy under the engine lane — shows
+        self._obs = obs
         self.max_pending = max_pending
         self._cv = threading.Condition()
         self._pending: dict[int, collections.deque] = {}
@@ -182,6 +187,16 @@ class PrefetchWorker:
                     table = self._fetch_fn(req.layer, *req.args)
                     res = PrefetchResult(
                         table=table, wall_seconds=time.perf_counter() - t0)
+                obs = self._obs
+                if obs is not None and obs.enabled:
+                    obs.tracer.add(
+                        f"fetch L{req.layer}",
+                        threading.current_thread().name, cat="prefetch",
+                        wall_t0=obs.tracer.now_wall() - res.wall_seconds,
+                        wall_dur=res.wall_seconds,
+                        args={"layer": req.layer,
+                              "modeled_io_s": res.io_seconds,
+                              "read_bytes": res.io_bytes})
                 req.future.set_result(res)
                 ok = True
             except BaseException as exc:  # propagate to the consumer

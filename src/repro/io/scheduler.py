@@ -13,7 +13,11 @@ into an ordered *plan* of coalesced runs:
 
 The scheduler is pure (no I/O, no locks): it only plans.  ``KVDiskStore``
 executes runs via :meth:`~repro.core.offload.KVDiskStore.read_run`, charging
-the :class:`~repro.core.offload.IOAccountant` one request per run.
+the :class:`~repro.core.offload.IOAccountant` one request per run.  Purity
+extends to observability: the scheduler publishes nothing itself — callers
+(:class:`~repro.core.manager.KVCacheManager`) feed :meth:`ReadScheduler.
+stats` of each plan into the metrics registry (``kvswap_read_plan_*``), so
+planning stays trivially unit-testable.
 """
 
 from __future__ import annotations

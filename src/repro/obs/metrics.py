@@ -1,0 +1,232 @@
+"""Typed metrics registry: counters, gauges, histograms.
+
+One process-local registry per :class:`~repro.obs.Observability` handle.
+The stack's existing stats dicts (``IOAccountant.snapshot()``,
+``summarize_steps``, ``WarmTier.snapshot()``, ``PrefixCacheStats``,
+``ServeSession.stats()``) stay the canonical shapes; when obs is attached
+the same increments are mirrored into this registry, so the snapshot here
+and the legacy dicts agree **exactly** (asserted by ``tests/test_obs.py``).
+
+Exactness is by construction, not by reconciliation:
+
+* :class:`IOAccountant` mirrors each charge *inside its own lock*, so the
+  registry counter accumulates the identical float sequence in the
+  identical order as the accountant's field — bit-equal totals even with
+  prefetch-worker threads charging concurrently.
+* The engine observes per-step histograms in ``step_log`` append order on
+  the main thread, so histogram sums equal ``sum()`` over ``step_log``.
+* Histogram quantiles are computed with the repo's single percentile
+  implementation (:func:`repro.utils.stats.percentiles`), the same helper
+  ``summarize_steps`` uses for the step tails.
+
+Exports: :meth:`MetricsRegistry.snapshot` (plain JSON-able dict) and
+:meth:`MetricsRegistry.to_prometheus` (text exposition format, histograms
+rendered summary-style with pXX quantile labels).
+
+Thread safety: each metric carries its own lock; creation is guarded by a
+registry lock.  All operations are cheap enough for per-fetch hot paths,
+but the disabled-obs path never reaches them at all (the engine guards
+every call site with ``if obs.enabled``).
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Iterable
+
+from repro.utils import stats as stats_util
+
+__all__ = ["Counter", "Gauge", "Histogram", "MetricsRegistry"]
+
+_NAME_OK = set("abcdefghijklmnopqrstuvwxyz"
+               "ABCDEFGHIJKLMNOPQRSTUVWXYZ0123456789_:")
+
+
+def _check_name(name: str) -> str:
+    if not name or not set(name) <= _NAME_OK or name[0].isdigit():
+        raise ValueError(f"invalid metric name: {name!r}")
+    return name
+
+
+class Counter:
+    """Monotonically increasing value (int or float)."""
+
+    kind = "counter"
+
+    def __init__(self, name: str, help: str = ""):
+        self.name = _check_name(name)
+        self.help = help
+        self._lock = threading.Lock()
+        self._value = 0
+
+    def inc(self, amount=1) -> None:
+        if amount < 0:
+            raise ValueError(f"counter {self.name} cannot decrease")
+        with self._lock:
+            self._value += amount
+
+    @property
+    def value(self):
+        with self._lock:
+            return self._value
+
+    def _reset(self) -> None:
+        """Internal: keep a mirrored counter in lockstep with a source that
+        resets (``IOAccountant.reset``).  Not part of the public API —
+        Prometheus counters are monotone between restarts."""
+        with self._lock:
+            self._value = 0
+
+
+class Gauge:
+    """A value that can go up and down (queue depth, resident bytes)."""
+
+    kind = "gauge"
+
+    def __init__(self, name: str, help: str = ""):
+        self.name = _check_name(name)
+        self.help = help
+        self._lock = threading.Lock()
+        self._value = 0
+
+    def set(self, value) -> None:
+        with self._lock:
+            self._value = value
+
+    def inc(self, amount=1) -> None:
+        with self._lock:
+            self._value += amount
+
+    def dec(self, amount=1) -> None:
+        with self._lock:
+            self._value -= amount
+
+    @property
+    def value(self):
+        with self._lock:
+            return self._value
+
+
+class Histogram:
+    """Sample accumulator with exact count/sum and percentile views.
+
+    Samples are kept verbatim (these are per-step / per-request series,
+    thousands at most — not production-cardinality buckets), so quantiles
+    are exact order statistics from the shared helper rather than bucket
+    interpolations, and ``sum`` accumulates in observation order (the
+    exactness contract with ``summarize_steps``).
+    """
+
+    kind = "histogram"
+
+    def __init__(self, name: str, help: str = ""):
+        self.name = _check_name(name)
+        self.help = help
+        self._lock = threading.Lock()
+        self._samples: list[float] = []
+        self._sum = 0.0
+
+    def observe(self, value) -> None:
+        v = float(value)
+        with self._lock:
+            self._samples.append(v)
+            self._sum += v
+
+    @property
+    def count(self) -> int:
+        with self._lock:
+            return len(self._samples)
+
+    @property
+    def sum(self) -> float:
+        with self._lock:
+            return self._sum
+
+    def samples(self) -> list[float]:
+        with self._lock:
+            return list(self._samples)
+
+    def percentiles(self, qs: Iterable[float] = stats_util.DEFAULT_QS) -> dict:
+        return stats_util.percentiles(self.samples(), qs)
+
+
+class MetricsRegistry:
+    """Name-keyed collection of typed metrics.
+
+    ``counter()``/``gauge()``/``histogram()`` are get-or-create: the first
+    call registers, later calls return the same object (re-registering
+    under a different type raises — a name means one thing).
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._metrics: dict[str, Counter | Gauge | Histogram] = {}
+
+    def _get_or_create(self, cls, name: str, help: str):
+        with self._lock:
+            m = self._metrics.get(name)
+            if m is None:
+                m = self._metrics[name] = cls(name, help)
+            elif not isinstance(m, cls):
+                raise TypeError(
+                    f"metric {name!r} already registered as {m.kind}")
+            return m
+
+    def counter(self, name: str, help: str = "") -> Counter:
+        return self._get_or_create(Counter, name, help)
+
+    def gauge(self, name: str, help: str = "") -> Gauge:
+        return self._get_or_create(Gauge, name, help)
+
+    def histogram(self, name: str, help: str = "") -> Histogram:
+        return self._get_or_create(Histogram, name, help)
+
+    def get(self, name: str):
+        with self._lock:
+            return self._metrics.get(name)
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._metrics)
+
+    def __contains__(self, name: str) -> bool:
+        with self._lock:
+            return name in self._metrics
+
+    # -- exporters --------------------------------------------------------
+    def snapshot(self) -> dict:
+        """JSON-able view: counters/gauges as plain values, histograms as
+        ``{count, sum, p50, p95, p99}``.  Deterministic key order (sorted)."""
+        with self._lock:
+            items = sorted(self._metrics.items())
+        out = {}
+        for name, m in items:
+            if isinstance(m, Histogram):
+                out[name] = {"count": m.count, "sum": m.sum,
+                             **m.percentiles()}
+            else:
+                out[name] = m.value
+        return out
+
+    def to_prometheus(self) -> str:
+        """Prometheus text exposition (version 0.0.4).  Histograms render
+        summary-style: ``{name}{quantile="0.5"}`` lines plus ``_sum`` and
+        ``_count`` — exact order statistics, not bucketed estimates."""
+        with self._lock:
+            items = sorted(self._metrics.items())
+        lines: list[str] = []
+        for name, m in items:
+            if m.help:
+                lines.append(f"# HELP {name} {m.help}")
+            if isinstance(m, Histogram):
+                lines.append(f"# TYPE {name} summary")
+                pct = m.percentiles()
+                for key, val in pct.items():
+                    q = float(key[1:]) / 100.0
+                    lines.append(f'{name}{{quantile="{q:g}"}} {val}')
+                lines.append(f"{name}_sum {m.sum}")
+                lines.append(f"{name}_count {m.count}")
+            else:
+                lines.append(f"# TYPE {name} {m.kind}")
+                lines.append(f"{name} {m.value}")
+        return "\n".join(lines) + ("\n" if lines else "")

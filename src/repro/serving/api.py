@@ -101,14 +101,18 @@ class ServeSession:
 
     def __init__(self, model, params, engine_cfg: EngineConfig, *,
                  slots: int, calib_k: np.ndarray | None = None,
-                 adapter=None, prefix_cache=None):
+                 adapter=None, prefix_cache=None, obs=None):
         kinds = getattr(model, "layer_kinds", ("kv",) * model.n_layers)
         if any(k != "kv" for k in kinds):
             raise ValueError(
                 "ServeSession requires attention-only models: recurrent "
                 "state layers have no per-row admission/retirement")
         self.engine = KVSwapEngine(model, params, engine_cfg, batch=slots,
-                                   calib_k=calib_k, adapter=adapter)
+                                   calib_k=calib_k, adapter=adapter, obs=obs)
+        # the engine resolves obs=None to the shared NULL_OBS; one handle
+        # covers the whole stack so engine spans and request lifecycles
+        # land on the same timeline
+        self.obs = self.engine.obs
         self.n_slots = slots
         self.prefix_cache = prefix_cache
         self.now = 0.0                  # modeled seconds
@@ -195,9 +199,39 @@ class ServeSession:
         req.state, req.finished_at, req.slot = DONE, self.now, None
         self.completed[req.rid] = req
         self._slots[i] = None
+        if self.obs.enabled:
+            self._obs_finish(req, i)
         events.append({"type": "finish", "rid": req.rid, "slot": i,
                        "t": self.now, "tokens": len(slot.out),
                        "stopped_early": req.stopped_early})
+
+    def _obs_finish(self, req: Request, i: int) -> None:
+        """Request lifecycle on the modeled clock: a ``queued`` span on the
+        shared ``requests`` lane (arrival → admission, which includes the
+        admission's own modeled prefill), a ``running`` span on the slot's
+        lane (admission → retirement) with a ``first_token`` instant, plus
+        the per-request counters/histograms
+        (:func:`repro.serving.metrics.publish_request`)."""
+        from repro.serving import metrics
+        rec = metrics.request_record(req)
+        tr = self.obs.tracer
+        tr.add(f"r{req.rid} queued", "requests", cat="request",
+               model_t0=req.arrival,
+               model_dur=req.admitted_at - req.arrival,
+               args={"rid": req.rid, "slo_class": req.slo_class,
+                     "prompt_tokens": rec["prompt_tokens"],
+                     "cached_tokens": rec["cached_tokens"]})
+        tr.add(f"r{req.rid}", f"slot{i}", cat="request",
+               model_t0=req.admitted_at,
+               model_dur=req.finished_at - req.admitted_at,
+               args={"rid": req.rid, "tokens": rec["tokens"],
+                     "ttft_s": rec["ttft_seconds"],
+                     "tpot_s": rec["tpot_seconds"],
+                     "stopped_early": rec["stopped_early"]})
+        tr.add("first_token", f"slot{i}", cat="request",
+               model_t0=req.first_token_at, instant=True,
+               args={"rid": req.rid})
+        metrics.publish_request(self.obs.registry, rec)
 
     # -- the scheduler iteration -----------------------------------------
     def step(self) -> list[dict]:
@@ -214,6 +248,10 @@ class ServeSession:
         if not self._active() and self._waiting:
             # idle engine: jump the clock to the next arrival
             self.now = max(self.now, min(r.arrival for r in self._waiting))
+            if self.obs.enabled:
+                # the modeled-clock cursor must follow the jump, or the
+                # next admission's span would overlap the idle gap
+                self.obs.sync_model(self.now)
         self._admit_due(events)
         if not self._active():
             return events
@@ -278,6 +316,14 @@ class ServeSession:
         eng = self.engine
         snap = eng.accountant.snapshot()
         served = snap["warm_bytes"] + snap["read_bytes"]
+        # overlap_report's "warm_bytes" is the MEAN PER STEP; the session
+        # also reports the accountant's session total under the same name.
+        # Rename the per-step view so the two never shadow each other:
+        #   warm_bytes          — session-cumulative warm-served bytes
+        #   warm_bytes_per_step — mean warm-served bytes per decode step
+        rep = eng.overlap_report()
+        if "warm_bytes" in rep:
+            rep["warm_bytes_per_step"] = rep.pop("warm_bytes")
         return {
             "completed_requests": len(done),
             "completed_tokens": tokens,
@@ -289,13 +335,11 @@ class ServeSession:
             "reuse_ratio": eng.reuse_ratio(),
             "read_bytes": snap["read_bytes"],
             "decode_steps": len(eng.step_log),
-            **eng.overlap_report(),
+            **rep,
             # warm tier (repro.tiers): session-cumulative bytes served from
             # host RAM instead of disk, and their share of all fetch-served
             # bytes — both straight from the accountant's per-source
-            # breakdown (same disk-read units), no reach into tier
-            # internals.  After the overlap_report spread: its "warm_bytes"
-            # is the mean per step, this one is the session total.
+            # breakdown (same disk-read units), no reach into tier internals
             "warm_bytes": snap["warm_bytes"],
             "warm_hit_rate": snap["warm_bytes"] / served if served else 0.0,
         }

@@ -89,6 +89,36 @@ def request_record(req) -> dict:
     }
 
 
+def publish_request(registry, record: Mapping) -> None:
+    """Mirror one completed request's lifecycle into a metrics registry
+    (:class:`repro.obs.MetricsRegistry`): request/token counters plus
+    TTFT/TPOT/e2e/wait histograms.  :class:`~repro.serving.api.ServeSession`
+    calls this at retirement when an obs handle is attached; the histograms
+    observe the exact values :func:`request_record` reports, so registry
+    quantiles agree with :func:`aggregate_requests` (same samples, same
+    percentile helper)."""
+    registry.counter("kvswap_requests_completed_total",
+                     "requests served to completion").inc()
+    registry.counter("kvswap_requests_tokens_total",
+                     "tokens generated for completed requests"
+                     ).inc(record["tokens"])
+    if record["stopped_early"]:
+        registry.counter("kvswap_requests_stopped_early_total",
+                         "requests ended by a stop token").inc()
+    registry.histogram("kvswap_request_ttft_seconds",
+                       "modeled time to first token"
+                       ).observe(record["ttft_seconds"])
+    registry.histogram("kvswap_request_tpot_seconds",
+                       "modeled mean inter-token gap"
+                       ).observe(record["tpot_seconds"])
+    registry.histogram("kvswap_request_e2e_seconds",
+                       "modeled end-to-end latency"
+                       ).observe(record["e2e_seconds"])
+    registry.histogram("kvswap_request_wait_seconds",
+                       "modeled queue wait + prefill"
+                       ).observe(record["wait_seconds"])
+
+
 def per_request_breakdown(requests: Iterable) -> list[dict]:
     """Records for every completed request, ordered by rid (submission
     order — stable regardless of completion interleaving)."""

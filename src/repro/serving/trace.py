@@ -309,7 +309,11 @@ def replay(trace: Trace, session) -> dict:
         "reuse_ratio", "read_bytes", "warm_bytes", "warm_hit_rate",
         "io_seconds", "compute_seconds", "pipelined_seconds",
         "overlap_saved_seconds", "step_seconds_p50", "step_seconds_p95",
-        "step_seconds_p99")}
+        "step_seconds_p99",
+        # prefetch quality (repro.obs.quality, pooled over the replay's
+        # steady-state window): predictor precision/recall as 1-step
+        # lookahead, and the reuse-resident-but-unselected rate
+        "pred_precision", "pred_recall", "stale_group_rate")}
     cached = sum(r["cached_tokens"] for r in records)
     return {
         "workload": trace.workload,

@@ -119,11 +119,29 @@ class WarmTier:
 
     def __init__(self, *, budget_bytes: int,
                  compute: hardware.ComputeSpec = hardware.ORIN,
-                 accountant=None):
+                 accountant=None, obs=None):
         self.budget_bytes = int(budget_bytes)
         self.compute = compute
         self.accountant = accountant
         self.stats = WarmTierStats()
+        # observability: mirror every stats increment into registry counters
+        # inside the tier lock, so counter totals always equal snapshot()
+        self._obs = obs
+        self._metrics = None
+        if obs is not None and obs.enabled:
+            c = obs.registry.counter
+            self._metrics = {
+                "hits": c("kvswap_warm_hits_total", "warm-tier hits"),
+                "misses": c("kvswap_warm_misses_total", "warm-tier misses"),
+                "admitted": c("kvswap_warm_admitted_total",
+                              "groups demoted from a reuse buffer"),
+                "evicted": c("kvswap_warm_evicted_total",
+                             "LRU evictions under the byte budget"),
+                "invalidated": c("kvswap_warm_invalidated_total",
+                                 "entries dropped for coherence"),
+                "rejected": c("kvswap_warm_rejected_total",
+                              "admissions refused (entry alone over budget)"),
+            }
         self._lock = threading.Lock()
         # key (layer, row, gid) -> _Entry; order = LRU (oldest first)
         self._entries: "collections.OrderedDict[tuple, _Entry]" = \
@@ -160,6 +178,13 @@ class WarmTier:
     def __len__(self) -> int:
         return len(self._entries)
 
+    def _minc(self, key: str, n: int = 1) -> None:
+        """Mirror one stats increment into the bound registry counter.
+        Called with the tier lock held, right where the stats field moves,
+        so counter totals always equal :meth:`snapshot`."""
+        if self._metrics is not None and n:
+            self._metrics[key].inc(n)
+
     # -- the victim-cache protocol ---------------------------------------
     def admit(self, layer: int, row: int, gid: int, kv: np.ndarray, *,
               scale: float | None = None, disk_nbytes: int | None = None) -> bool:
@@ -186,6 +211,7 @@ class WarmTier:
         with self._lock:
             if charged > self.budget_bytes:
                 self.stats.rejected += 1
+                self._minc("rejected")
                 return False
             key = (layer, row, gid)
             old = self._entries.pop(key, None)
@@ -195,12 +221,14 @@ class WarmTier:
                 vkey, victim = self._entries.popitem(last=False)
                 self._uncharge(vkey[1], victim.charged)
                 self.stats.evicted += 1
+                self._minc("evicted")
             self._entries[key] = _Entry(
                 q=q, scale=s, charged=charged,
                 disk_nbytes=int(disk_nbytes) if disk_nbytes else q.nbytes)
             self._bytes_used += charged
             self._row_bytes[row] = self._row_bytes.get(row, 0) + charged
             self.stats.admitted += 1
+            self._minc("admitted")
         return True
 
     def serve(self, layer: int, row: int, gid: int, dtype) -> np.ndarray | None:
@@ -216,9 +244,18 @@ class WarmTier:
             entry = self._entries.pop((layer, row, gid), None)
             if entry is None:
                 self.stats.misses += 1
+                self._minc("misses")
                 return None
             self._uncharge(row, entry.charged)
             self.stats.hits += 1
+            self._minc("hits")
+        obs = self._obs
+        if obs is not None and obs.enabled:
+            # hits are sparse enough to mark individually; admissions are
+            # every reuse eviction and stay counter-only
+            obs.tracer.add("warm_hit", "warm-tier", cat="warm",
+                           wall_t0=obs.tracer.now_wall(), instant=True,
+                           args={"layer": layer, "row": row, "group": gid})
         out = (entry.q.astype(np.float32) * np.float32(entry.scale)).astype(dtype)
         if self.accountant is not None:
             self.accountant.charge_warm(
@@ -236,6 +273,7 @@ class WarmTier:
             if entry is not None:
                 self._uncharge(row, entry.charged)
                 self.stats.invalidated += 1
+                self._minc("invalidated")
 
     def invalidate_range(self, layer: int, row: int, n_groups: int) -> None:
         """Drop every entry for groups ``[0, n_groups)`` of one (layer, row)
@@ -252,6 +290,7 @@ class WarmTier:
             for key in doomed:
                 self._uncharge(row, self._entries.pop(key).charged)
             self.stats.invalidated += len(doomed)
+            self._minc("invalidated", len(doomed))
 
     def clear_row(self, row: int) -> None:
         """Retire a batch row: free every layer's entries for it (the slot-
@@ -263,6 +302,7 @@ class WarmTier:
             for key in doomed:
                 self._uncharge(row, self._entries.pop(key).charged)
             self.stats.invalidated += len(doomed)
+            self._minc("invalidated", len(doomed))
 
     def _uncharge(self, row: int, charged: int) -> None:
         """Caller holds the lock."""
