@@ -20,6 +20,8 @@ import tempfile
 
 import numpy as np
 
+from repro.faults.errors import ManifestCorrupt
+
 
 @dataclasses.dataclass
 class BlockMeta:
@@ -32,6 +34,7 @@ class BlockMeta:
     start_group: int            # extent [start_group, start_group + n_groups)
     n_groups: int               # ... in the slab, per layer
     last_used: int              # logical LRU clock tick
+    checksum: int = 0           # CRC32 of the extent's at-rest bytes; 0 = unverifiable (pre-checksum manifest)
     pins: int = 0               # runtime refcount; never persisted
 
     def to_json(self) -> dict:
@@ -41,6 +44,10 @@ class BlockMeta:
 
     @classmethod
     def from_json(cls, d: dict) -> "BlockMeta":
+        d = dict(d)
+        # manifests written before the integrity PR carry no checksum;
+        # 0 means "skip verification" rather than "must equal zero"
+        d.setdefault("checksum", 0)
         return cls(pins=0, **d)
 
 
@@ -100,7 +107,18 @@ class Manifest:
 
     # -- persistence ------------------------------------------------------
     def save(self, path: str) -> None:
-        """Atomic write (tmp + rename) so a crash never truncates the index."""
+        """Durable atomic write: tmp file → fsync(file) → rename →
+        fsync(directory).
+
+        The file fsync *before* ``os.replace`` guarantees the rename can
+        only ever expose fully-written bytes (rename-before-data lets a
+        power cut leave the final name pointing at a truncated file); the
+        directory fsync afterwards persists the rename itself.  Either
+        way a crash leaves the old manifest or the new one — never a torn
+        hybrid — and :meth:`load` treats anything torn as
+        :class:`~repro.faults.errors.ManifestCorrupt` rather than
+        trusting it.
+        """
         payload = {
             "geometry": dataclasses.asdict(self.geometry),
             "clock": self.clock,
@@ -111,7 +129,14 @@ class Manifest:
         try:
             with os.fdopen(fd, "w") as f:
                 json.dump(payload, f)
+                f.flush()
+                os.fsync(f.fileno())
             os.replace(tmp, path)
+            dirfd = os.open(d, os.O_RDONLY)
+            try:
+                os.fsync(dirfd)
+            finally:
+                os.close(dirfd)
         except BaseException:
             if os.path.exists(tmp):
                 os.unlink(tmp)
@@ -119,11 +144,20 @@ class Manifest:
 
     @classmethod
     def load(cls, path: str) -> "Manifest":
-        with open(path) as f:
-            payload = json.load(f)
-        m = cls(CacheGeometry(**payload["geometry"]))
-        m.clock = payload["clock"]
-        for d in payload["blocks"]:
-            meta = BlockMeta.from_json(d)
-            m.blocks[meta.block_id] = meta
+        """Parse a manifest, raising the typed
+        :class:`~repro.faults.errors.ManifestCorrupt` on a truncated or
+        garbage file so callers can run recovery (empty index + orphan
+        GC, see ``PrefixCache``) instead of crashing the open."""
+        try:
+            with open(path) as f:
+                payload = json.load(f)
+            m = cls(CacheGeometry(**payload["geometry"]))
+            m.clock = int(payload["clock"])
+            for d in payload["blocks"]:
+                meta = BlockMeta.from_json(d)
+                m.blocks[meta.block_id] = meta
+        except (json.JSONDecodeError, KeyError, TypeError, ValueError,
+                UnicodeDecodeError) as exc:
+            raise ManifestCorrupt(
+                f"unreadable manifest {path}: {exc}", path=path) from exc
         return m

@@ -27,6 +27,8 @@ from repro.cache.manifest import BlockMeta, CacheGeometry, Manifest
 from repro.cache.policy import LRUPinPolicy
 from repro.cache.store import PrefixBlockStore
 from repro.core.offload import IOAccountant
+from repro.faults.errors import (CorruptBlockError, InjectedCrash,
+                                 ManifestCorrupt)
 from repro.io.scheduler import ReadScheduler
 
 from repro.utils.bytesize import MiB
@@ -79,6 +81,8 @@ class PrefixCacheStats:
     dedup_blocks: int = 0       # publish hits (block already resident)
     evicted_blocks: int = 0
     declined_blocks: int = 0    # budget full of pinned blocks
+    corrupt_blocks: int = 0     # extent-checksum mismatches on restore
+    quarantined_blocks: int = 0  # blocks dropped by quarantine (incl. descendants)
 
     @property
     def hit_rate(self) -> float:
@@ -98,18 +102,44 @@ class PrefixCache:
         self.stats = PrefixCacheStats()
         self._accountant = accountant
         self._obs = None
+        self._faults = None
+        self.recovered_from: str | None = None
         if cfg.dir:
             os.makedirs(cfg.dir, exist_ok=True)
             mpath = self._manifest_path()
             if os.path.exists(mpath):
-                self.manifest = Manifest.load(mpath)
-                self._open_store(self.manifest.geometry)
-                for meta in self.manifest.blocks.values():
-                    self.store.mark_allocated(meta.start_group, meta.n_groups)
+                try:
+                    self.manifest = Manifest.load(mpath)
+                    self._open_store(self.manifest.geometry)
+                    for meta in self.manifest.blocks.values():
+                        self.store.mark_allocated(meta.start_group,
+                                                  meta.n_groups)
+                except (ManifestCorrupt, RuntimeError, OSError,
+                        ValueError) as exc:
+                    # torn manifest / impossible extents: the index can't
+                    # be trusted, so recover instead of refusing to open
+                    self._recover_dir(exc)
 
     # -- setup ------------------------------------------------------------
     def _manifest_path(self) -> str:
         return os.path.join(self.cfg.dir, "manifest.json")
+
+    def _recover_dir(self, exc: BaseException) -> None:
+        """Recover a persistent cache directory whose index is unusable
+        (docs/robustness.md): drop the manifest, GC the orphaned slab
+        files (their extents have no trustworthy owner left), and start
+        the directory empty.  Losing cached prefixes only costs
+        warm-prefill speed — serving anything the torn index pointed at
+        could cost correctness."""
+        self.recovered_from = f"{type(exc).__name__}: {exc}"
+        if self.store is not None:
+            self.store.close()
+            self.store = None
+        self.manifest = None
+        for name in ("manifest.json", "blocks.bin", "blocks.bin.scales.npy"):
+            p = os.path.join(self.cfg.dir, name)
+            if os.path.exists(p):
+                os.unlink(p)
 
     def _open_store(self, geo: CacheGeometry) -> None:
         path = os.path.join(self.cfg.dir, "blocks.bin") if self.cfg.dir else None
@@ -188,7 +218,19 @@ class PrefixCache:
                                       "blocks newly published"),
                 "dedup_blocks": c("kvswap_prefix_dedup_blocks_total",
                                   "publishes deduplicated by content hash"),
+                "corrupt_blocks": c("kvswap_prefix_corrupt_blocks_total",
+                                    "extent-checksum mismatches on restore"),
+                "quarantined_blocks": c(
+                    "kvswap_prefix_quarantined_blocks_total",
+                    "blocks dropped by quarantine (incl. descendants)"),
             }
+
+    def use_faults(self, plan) -> None:
+        """Attach a fault-injection plan (:class:`repro.faults.FaultPlan`):
+        published extents may be corrupted at rest and manifest saves may
+        hit crash points — the injection side of the integrity machinery
+        (same engine-agnostic attach pattern as :meth:`use_accountant`)."""
+        self._faults = plan
 
     # -- lookup -----------------------------------------------------------
     def match(self, tokens: np.ndarray, *, max_tokens: int | None = None
@@ -258,8 +300,30 @@ class PrefixCache:
         Reads are planned per layer across *all* matched extents, so chains
         that were published contiguously restore as one long sequential read
         per layer, charged through the accountant.
+
+        Integrity (docs/robustness.md): before any bytes are served, every
+        block's extent is re-hashed against the CRC32 its manifest entry
+        recorded at publish time.  A mismatch quarantines the block (and
+        every resident descendant — their chains pass through the bad
+        data) and raises :class:`~repro.faults.errors.CorruptBlockError`;
+        the engine then re-matches the now-shorter chain, so warm prefill
+        degrades block by block toward a cold prefill instead of ever
+        computing on corrupt KV.  ``checksum == 0`` (pre-checksum
+        manifests) skips verification for that block.
         """
         geo = self.manifest.geometry
+        for idx, m in enumerate(metas):
+            if m.checksum and self.store.checksum_extent(
+                    m.start_group, m.n_groups) != m.checksum:
+                dropped = self.quarantine(m.block_id)
+                self.stats.corrupt_blocks += 1
+                if self._obs is not None:
+                    self._m["corrupt_blocks"].inc()
+                    self._m["quarantined_blocks"].inc(dropped)
+                raise CorruptBlockError(
+                    f"block {m.block_id} (chain depth {m.index}) failed its "
+                    f"extent checksum; quarantined {dropped} block(s)",
+                    block_id=m.block_id, index=m.index, verified_blocks=idx)
         extents = [(m.start_group, m.n_groups) for m in metas]
         n_tok = sum(m.n_tokens for m in metas)
         hkv, d = geo.n_kv_heads, geo.head_dim
@@ -323,11 +387,17 @@ class PrefixCache:
                 self._evict(victims)
         finally:
             self.unpin(ancestors)
-        self.store.write_block(start, k, v)
+        checksum = self.store.write_block(start, k, v)
+        if self._faults is not None:
+            # at-rest corruption is injected after the checksum is taken,
+            # so a flipped extent is exactly what verification must catch
+            self._faults.corrupt_block(self.store, start, ng,
+                                       key=block.block_id)
         meta = BlockMeta(
             block_id=block.block_id, parent_id=block.parent_id,
             index=block.index, n_tokens=block.n_tokens,
-            start_group=start, n_groups=ng, last_used=self.manifest.tick())
+            start_group=start, n_groups=ng, last_used=self.manifest.tick(),
+            checksum=checksum)
         self.manifest.blocks[meta.block_id] = meta
         self.stats.published_blocks += 1
         if self._obs is not None:
@@ -339,6 +409,29 @@ class PrefixCache:
             del self.manifest.blocks[m.block_id]
             self.store.free(m.start_group, m.n_groups)
             self.stats.evicted_blocks += 1
+
+    def quarantine(self, block_id: str) -> int:
+        """Drop a corrupt block and every resident descendant (their chains
+        pass through the bad data, so none of them is restorable).  Returns
+        the number of blocks removed.  Pins are deliberately ignored:
+        integrity beats residency — a pinned-but-corrupt block must never
+        be served again, and in-flight restore loops re-match afterwards.
+        """
+        if self.manifest is None or block_id not in self.manifest.blocks:
+            return 0
+        doomed = {block_id}
+        changed = True
+        while changed:
+            changed = False
+            for m in self.manifest.blocks.values():
+                if m.block_id not in doomed and m.parent_id in doomed:
+                    doomed.add(m.block_id)
+                    changed = True
+        for bid in doomed:
+            m = self.manifest.blocks.pop(bid)
+            self.store.free(m.start_group, m.n_groups)
+        self.stats.quarantined_blocks += len(doomed)
+        return len(doomed)
 
     # -- introspection ----------------------------------------------------
     def resident_blocks(self) -> int:
@@ -352,6 +445,17 @@ class PrefixCache:
         """Persist the manifest (and flush the slab) for ``dir`` caches."""
         if self.cfg.dir and self.manifest is not None and self.store is not None:
             self.store.flush()
+            if self._faults is not None and \
+                    self._faults.should_crash("manifest_write"):
+                # simulate dying mid-manifest-write: leave a torn file
+                # where the manifest belongs (what a power cut during the
+                # pre-fsync copy would leave as the *tmp* file, or a
+                # non-atomic writer would leave in place), then die.  The
+                # next process opening this dir exercises _recover_dir.
+                with open(self._manifest_path(), "w") as f:
+                    f.write('{"geometry": {"n_layers": ')
+                raise InjectedCrash("crashed during manifest write",
+                                    point="manifest_write")
             self.manifest.save(self._manifest_path())
 
     def close(self) -> None:

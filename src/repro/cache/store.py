@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import os
 import tempfile
+import zlib
 
 import numpy as np
 
@@ -148,11 +149,14 @@ class PrefixBlockStore:
         raise RuntimeError(f"extent [{start}, {stop}) is not free")
 
     # -- writes -----------------------------------------------------------
-    def write_block(self, start: int, k: np.ndarray, v: np.ndarray) -> None:
+    def write_block(self, start: int, k: np.ndarray, v: np.ndarray) -> int:
         """Store one block's KV at extent ``start``.
 
         ``k, v``: ``[n_layers, n_groups, G, H_kv, d]``.  Charged as one
         sequential write per layer (a block's groups are contiguous).
+        Returns the CRC32 of the extent's at-rest bytes — the checksum
+        recorded on the block's manifest entry and re-verified by
+        :meth:`checksum_extent` before any restore serves from it.
         """
         nl, ng = k.shape[0], k.shape[1]
         if nl != self.n_layers:
@@ -164,10 +168,31 @@ class PrefixBlockStore:
             qblk, scale = quant_groups(block)
             self._mm[:, start:start + ng] = qblk
             self._scales[:, start:start + ng] = scale
+            crc = zlib.crc32(np.ascontiguousarray(qblk).tobytes())
+            crc = zlib.crc32(
+                np.ascontiguousarray(scale.astype(np.float32)).tobytes(), crc)
         else:
-            self._mm[:, start:start + ng] = block.astype(self.dtype)
+            data = np.ascontiguousarray(block.astype(self.dtype))
+            self._mm[:, start:start + ng] = data
+            crc = zlib.crc32(data.tobytes())
         if self.accountant is not None:
             self.accountant.charge_write(nl * ng * self.group_nbytes, nl)
+        return crc
+
+    def checksum_extent(self, start: int, n_groups: int) -> int:
+        """CRC32 of an extent as it sits in the slab (plus the int8 scales
+        that dequantize it) — byte-order-identical to what
+        :meth:`write_block` hashed, so any at-rest flip changes the value.
+        Not charged to the accountant: real stacks checksum the buffer a
+        read just delivered; modeling it as extra disk traffic would
+        double-bill every verified restore."""
+        crc = zlib.crc32(
+            np.ascontiguousarray(self._mm[:, start:start + n_groups]).tobytes())
+        if self._scales is not None:
+            crc = zlib.crc32(
+                np.ascontiguousarray(
+                    self._scales[:, start:start + n_groups]).tobytes(), crc)
+        return crc
 
     # -- reads ------------------------------------------------------------
     def read_extents(

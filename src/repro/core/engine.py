@@ -77,7 +77,9 @@ from repro.core.offload import DISKS, DiskSpec, IOAccountant, KVDiskStore
 from repro.core.predictor import PredictorConfig
 from repro.core.reuse_buffer import ReuseBuffer
 from repro.core.rolling_buffer import RollingBuffer
-from repro.io import DoubleBuffer, PrefetchWorker, ReadScheduler
+from repro.faults.errors import CorruptBlockError, StorageFault
+from repro.faults.retry import RetryPolicy
+from repro.io import DoubleBuffer, PrefetchWorker, ReadRun, ReadScheduler
 from repro.obs import NULL_OBS, PrefetchQualityMeter
 from repro.utils import stats as stats_util
 
@@ -145,6 +147,12 @@ class EngineConfig:
     async_io: bool = False         # background prefetch pipeline (repro.io)
     io_threads: int = 2            # PrefetchWorker pool size
     coalesce_gap: int = 0          # ReadScheduler gap coalescing (groups)
+    # bounded retry-with-backoff for disk reads (docs/robustness.md):
+    # io_max_attempts total attempts per coalesced run, exponential modeled
+    # backoff from io_backoff_s between them (charged as accountant stall
+    # time, never slept).  1 attempt = fail on first error.
+    io_max_attempts: int = 3
+    io_backoff_s: float = 0.002
 
     @property
     def disk_spec(self) -> DiskSpec:
@@ -297,6 +305,7 @@ class KVSwapEngine:
         adapter: LowRankAdapter | None = None,
         calib_k: np.ndarray | None = None,
         obs=None,
+        faults=None,
     ):
         self.model = model
         self.params = params
@@ -354,6 +363,15 @@ class KVSwapEngine:
             dtype=cfg.np_dtype, accountant=self.accountant,
             quant_bits=8 if cfg.kv_bits == 8 else 0,
         )
+        # fault injection (docs/robustness.md): with a FaultPlan attached
+        # the disk tier is wrapped in the FaultyDisk shim; faults=None keeps
+        # the bare store — the unfaulted stack is untouched by construction.
+        # Imported lazily so the production path never loads the package.
+        self.faults = faults
+        if faults is not None:
+            from repro.faults import FaultyDisk
+
+            self.store = FaultyDisk(self.store, faults)
         if cfg.use_pallas:
             from repro.models import layers as _L
             _L.set_use_pallas(True)
@@ -383,10 +401,15 @@ class KVSwapEngine:
                                  accountant=self.accountant,
                                  obs=self.obs)
             self.store.warm = self.warm
+        # one retry policy shared by every manager (and publish): transient
+        # disk faults are absorbed below the engine, surfacing only as
+        # modeled stall seconds; exhaustion escalates as typed FetchFailed
+        self._retry = RetryPolicy(max_attempts=cfg.io_max_attempts,
+                                  backoff_base_s=cfg.io_backoff_s)
         self.managers = [
             KVCacheManager(store=self.store, reuse=self.reuse[j], rolling=self.rolling[j],
                            layer=j, scheduler=self.scheduler, warm=self.warm,
-                           obs=self.obs)
+                           obs=self.obs, retry=self._retry)
             for j in range(n_kv_layers)
         ]
         self.prefetcher: PrefetchWorker | None = None
@@ -414,6 +437,10 @@ class KVSwapEngine:
         self.row_active = np.zeros(batch, dtype=bool)
         self.row_seq = np.zeros(batch, dtype=np.int64)    # tokens seen (incl. tail)
         self.row_valid = np.zeros(batch, dtype=np.int64)  # tokens in k_lr (n_groups·G)
+        # runtime critical-group budget: starts at cfg.n_select and can be
+        # lowered/restored by the serving degradation ladder (set_n_select)
+        # without touching the frozen config
+        self.n_select = cfg.n_select
         self.pred_cfg = PredictorConfig(
             group_size=g, n_select=cfg.n_select,
             n_heads=model.n_heads, n_kv_heads=model.n_kv_heads,
@@ -646,15 +673,28 @@ class KVSwapEngine:
 
         with self.accountant.track() as tr:
             # identical rows (shared system prompts, padded clones) resolve
-            # to the same chain — read each unique chain once
-            uniq = {ch[-1].block_id: ch for ch in chains}
-            for ch in uniq.values():
-                cache.pin(ch)
-            try:
-                data = {key: cache.read_chain(ch) for key, ch in uniq.items()}
-            finally:
+            # to the same chain — read each unique chain once.  A checksum
+            # mismatch quarantines the bad block (and its descendants) inside
+            # read_chain; re-match against the now-shorter cache and retry —
+            # warm prefill degrades to a longer suffix, never to wrong KV.
+            while True:
+                uniq = {ch[-1].block_id: ch for ch in chains}
                 for ch in uniq.values():
-                    cache.unpin(ch)
+                    cache.pin(ch)
+                try:
+                    data = {key: cache.read_chain(ch) for key, ch in uniq.items()}
+                    break
+                except CorruptBlockError:
+                    chains = [cache.match(tokens_np[bi], max_tokens=s - 1)
+                              for bi in range(b)]
+                    n_cached = min(sum(m.n_tokens for m in ch) for ch in chains)
+                    if n_cached == 0:
+                        return self.prefill(tokens_np)
+                    n_blocks = n_cached // cache.cfg.block_tokens
+                    chains = [ch[:n_blocks] for ch in chains]
+                finally:
+                    for ch in uniq.values():
+                        cache.unpin(ch)
             nkv, hkv, hd = len(self.kv_layers), self.model.n_kv_heads, self.model.head_dim
             k_pre = np.empty((nkv, b, n_cached, hkv, hd), dtype=self.cfg.np_dtype)
             v_pre = np.empty_like(k_pre)
@@ -684,6 +724,27 @@ class KVSwapEngine:
         self._finish_prefill_report(s=s, n_cached=n_cached, tr=tr,
                                     wall=time.perf_counter() - t0)
         return logits
+
+    def _restore_prefix(self, cache, tokens_np: np.ndarray, s: int):
+        """Longest *verified* cached prefix of one prompt: match → pin →
+        read_chain, re-matching after a :class:`CorruptBlockError`
+        (``read_chain`` quarantined the bad block and its descendants, so
+        every retry sees a strictly shorter chain and the loop terminates).
+        Returns ``(n_cached, k_pre, v_pre)`` — ``(0, None, None)`` when
+        nothing restorable is left."""
+        while True:
+            chain = cache.match(tokens_np, max_tokens=s - 1)
+            n_cached = sum(m.n_tokens for m in chain)
+            if not n_cached:
+                return 0, None, None
+            cache.pin(chain)
+            try:
+                k_pre, v_pre = cache.read_chain(chain)  # [nkv, n_cached, hkv, d]
+                return n_cached, k_pre, v_pre
+            except CorruptBlockError:
+                continue
+            finally:
+                cache.unpin(chain)
 
     # -- per-slot request lifecycle (continuous batching) ----------------
     def admit_row(self, bi: int, tokens: np.ndarray, cache=None) -> jax.Array:
@@ -724,56 +785,60 @@ class KVSwapEngine:
                 and hasattr(self.model, "prefill_block_with_ctx"))
         n_cached = 0
         k_pre = v_pre = None
-        with self.accountant.track() as tr:
-            if warm:
-                cache.open(n_layers=nkv, group_size=g,
-                           n_kv_heads=self.model.n_kv_heads,
-                           head_dim=self.model.head_dim, dtype=self.cfg.np_dtype)
-                cache.use_accountant(self.accountant)
-                cache.use_obs(self.obs)
-                chain = cache.match(tokens_np, max_tokens=s - 1)
-                n_cached = sum(m.n_tokens for m in chain)
-                if n_cached:
-                    cache.pin(chain)
-                    try:
-                        k_pre, v_pre = cache.read_chain(chain)  # [nkv, n_cached, hkv, d]
-                    finally:
-                        cache.unpin(chain)
-            positions = jnp.arange(n_cached, s)[None, :]
-            x = self.model.embed(self.params, jnp.asarray(tokens_np[None, n_cached:]))
-            for layer in range(self.model.n_layers):
-                j = self._kv_index[layer]
-                if n_cached:
-                    kp = jnp.asarray(k_pre[j][None])
-                    vp = jnp.asarray(v_pre[j][None])
-                    x, k_suf, v_suf = self.model.prefill_block_with_ctx(
-                        self.params, layer, x, positions, kp, vp)
-                    k_dev = jnp.concatenate([kp, k_suf], axis=1)
-                    k_np = np.concatenate(
-                        [k_pre[j], np.asarray(jax.device_get(k_suf[0]),
-                                              dtype=self.cfg.np_dtype)], axis=0)
-                    v_np = np.concatenate(
-                        [v_pre[j], np.asarray(jax.device_get(v_suf[0]),
-                                              dtype=self.cfg.np_dtype)], axis=0)
-                else:
-                    x, k, v = self.model.prefill_block(self.params, layer, x, positions)
-                    k_dev = k
-                    k_np = np.asarray(jax.device_get(k[0]), dtype=self.cfg.np_dtype)
-                    v_np = np.asarray(jax.device_get(v[0]), dtype=self.cfg.np_dtype)
-                self.store.write_prefill_row(j, bi, k_np, v_np)
-                if s - ng * g:
-                    self.rolling[j].seed_row(bi, k_np[ng * g:], v_np[ng * g:])
-                if ng:
-                    rows = compress_k(k_dev[:, : ng * g].astype(jnp.float32),
-                                      self.adapter)
-                    self.k_lr[j] = _klr_append_row(
-                        self.k_lr[j], rows, jnp.int32(bi), jnp.int32(0))
-                if self._dev_ready:
-                    # seed the device rolling mirror's row from the host tail
-                    self._tail_k[j] = self._tail_k[j].at[bi].set(
-                        jnp.asarray(self.rolling[j].k[bi]).astype(self._tail_k[j].dtype))
-                    self._tail_v[j] = self._tail_v[j].at[bi].set(
-                        jnp.asarray(self.rolling[j].v[bi]).astype(self._tail_v[j].dtype))
+        try:
+            with self.accountant.track() as tr:
+                if warm:
+                    cache.open(n_layers=nkv, group_size=g,
+                               n_kv_heads=self.model.n_kv_heads,
+                               head_dim=self.model.head_dim,
+                               dtype=self.cfg.np_dtype)
+                    cache.use_accountant(self.accountant)
+                    cache.use_obs(self.obs)
+                    n_cached, k_pre, v_pre = self._restore_prefix(
+                        cache, tokens_np, s)
+                positions = jnp.arange(n_cached, s)[None, :]
+                x = self.model.embed(
+                    self.params, jnp.asarray(tokens_np[None, n_cached:]))
+                for layer in range(self.model.n_layers):
+                    j = self._kv_index[layer]
+                    if n_cached:
+                        kp = jnp.asarray(k_pre[j][None])
+                        vp = jnp.asarray(v_pre[j][None])
+                        x, k_suf, v_suf = self.model.prefill_block_with_ctx(
+                            self.params, layer, x, positions, kp, vp)
+                        k_dev = jnp.concatenate([kp, k_suf], axis=1)
+                        k_np = np.concatenate(
+                            [k_pre[j], np.asarray(jax.device_get(k_suf[0]),
+                                                  dtype=self.cfg.np_dtype)], axis=0)
+                        v_np = np.concatenate(
+                            [v_pre[j], np.asarray(jax.device_get(v_suf[0]),
+                                                  dtype=self.cfg.np_dtype)], axis=0)
+                    else:
+                        x, k, v = self.model.prefill_block(self.params, layer, x, positions)
+                        k_dev = k
+                        k_np = np.asarray(jax.device_get(k[0]), dtype=self.cfg.np_dtype)
+                        v_np = np.asarray(jax.device_get(v[0]), dtype=self.cfg.np_dtype)
+                    self.store.write_prefill_row(j, bi, k_np, v_np)
+                    if s - ng * g:
+                        self.rolling[j].seed_row(bi, k_np[ng * g:], v_np[ng * g:])
+                    if ng:
+                        rows = compress_k(k_dev[:, : ng * g].astype(jnp.float32),
+                                          self.adapter)
+                        self.k_lr[j] = _klr_append_row(
+                            self.k_lr[j], rows, jnp.int32(bi), jnp.int32(0))
+                    if self._dev_ready:
+                        # seed the device rolling mirror's row from the host tail
+                        self._tail_k[j] = self._tail_k[j].at[bi].set(
+                            jnp.asarray(self.rolling[j].k[bi]).astype(self._tail_k[j].dtype))
+                        self._tail_v[j] = self._tail_v[j].at[bi].set(
+                            jnp.asarray(self.rolling[j].v[bi]).astype(self._tail_v[j].dtype))
+        except StorageFault:
+            # failure atomicity: a half-admitted slot (some layers written,
+            # some not) must not look admissible or decodeable — roll it all
+            # the way back to "free" and let the caller fail the request
+            self._free_row(bi)
+            self.row_active[bi] = False
+            raise
         self.row_seq[bi] = s
         self.row_valid[bi] = ng * g
         self.row_active[bi] = True
@@ -811,6 +876,29 @@ class KVSwapEngine:
         tokens: a stopped row issues no reads and charges no time, but its
         KV stays publishable until :meth:`retire_row`)."""
         self.row_active[bi] = False
+
+    def reactivate_row(self, bi: int) -> None:
+        """Undo :meth:`deactivate_row`: the slot resumes decoding from
+        exactly where it stopped (its KV, tail, and selection history were
+        never freed).  Only valid on a slot holding a live request."""
+        if self.row_seq[bi] == 0:
+            raise RuntimeError(f"slot {bi} holds no request; admit one first")
+        self.row_active[bi] = True
+
+    def set_n_select(self, n: int) -> int:
+        """Set the *runtime* critical-group budget (degradation ladder knob).
+
+        Bounded by ``[1, cfg.n_select]`` — the device gather mirror and the
+        reuse buffer were sized for ``cfg.n_select`` at construction, so the
+        budget can shrink under load (fewer groups fetched per step → less
+        I/O per step) and recover back up, but never exceed its capacity.
+        Takes effect on the next :meth:`decode_step`; changing it changes
+        which groups attend, so outputs are only bit-identical to a run
+        that made the same changes at the same steps.  Returns the clamped
+        value actually in effect.
+        """
+        self.n_select = max(1, min(int(n), self.cfg.n_select))
+        return self.n_select
 
     def _free_row(self, bi: int) -> None:
         for j in range(len(self.kv_layers)):
@@ -879,7 +967,11 @@ class KVSwapEngine:
             k = np.empty((nkv, ngr, g, hkv, hd), dtype=self.cfg.np_dtype)
             v = np.empty_like(k)
             for j in range(nkv):
-                k[j], v[j] = self.store.read_run(j, bi, g0, ngr)
+                # retried like a decode fetch: a transient read error must
+                # not fail the request at the finish line (publishing is
+                # best-effort, but a retry is cheaper than losing the chain)
+                k[j], v[j] = self.managers[j].read_run_with_retry(
+                    bi, ReadRun(g0, ngr, tuple(range(g0, g0 + ngr))))
             for blk in missing:
                 off = (blk.index * bg) - g0
                 if not cache.put_block(blk, k[:, off:off + bg], v[:, off:off + bg]):
@@ -1287,13 +1379,13 @@ class KVSwapEngine:
 
             return fused_predict_pallas(
                 q32, self._per_head_a, self.k_lr[layer], valid,
-                group_size=self.cfg.group_size, n_select=self.cfg.n_select,
+                group_size=self.cfg.group_size, n_select=self.n_select,
                 interpret=_L.PALLAS_INTERPRET)
         from repro.core.predictor import fused_predict
 
         return fused_predict(
             q32, self._per_head_a, self.k_lr[layer], valid,
-            group_size=self.cfg.group_size, n_select=self.cfg.n_select)
+            group_size=self.cfg.group_size, n_select=self.n_select)
 
     @staticmethod
     def _pipeline_latency(t_compute: Sequence[float], t_io: Sequence[float]) -> float:

@@ -21,7 +21,9 @@ import numpy as np
 from repro.core.offload import KVDiskStore
 from repro.core.reuse_buffer import ReuseBuffer
 from repro.core.rolling_buffer import RollingBuffer
-from repro.io.scheduler import ReadScheduler
+from repro.faults.errors import FetchFailed, StorageFault
+from repro.faults.retry import RetryPolicy, call_with_retries
+from repro.io.scheduler import ReadRun, ReadScheduler
 
 REGION_REUSE = 0
 REGION_ROLLING = 1
@@ -60,12 +62,19 @@ class KVCacheManager:
 
     def __init__(self, *, store: KVDiskStore, reuse: ReuseBuffer, rolling: RollingBuffer,
                  layer: int, scheduler: ReadScheduler | None = None, warm=None,
-                 obs=None):
+                 obs=None, retry: RetryPolicy | None = None):
         self.store = store
         self.reuse = reuse
         self.rolling = rolling
         self.layer = layer
         self.scheduler = scheduler or ReadScheduler(max_gap=0)
+        # bounded retry-with-backoff for disk reads (docs/robustness.md):
+        # transient faults are absorbed here, charging modeled backoff to
+        # the accountant; exhaustion escalates as a typed FetchFailed with
+        # (layer, row, run) context.  None = fail on first error.
+        self.retry = retry
+        self.retries = 0          # retried attempts, lifetime
+        self.fetch_failures = 0   # runs given up on, lifetime
         # optional host-RAM warm tier (repro.tiers.WarmTier) between the
         # reuse buffer and disk: fetch consults it before planning disk
         # reads, and reuse-buffer evictions demote into it (victim cache)
@@ -87,6 +96,12 @@ class KVCacheManager:
             self._m_plan_wasted = reg.counter(
                 "kvswap_read_plan_groups_wasted_total",
                 "gap groups read through but not requested")
+            self._m_retries = reg.counter(
+                "kvswap_io_retries_total",
+                "disk read attempts retried after a transient fault")
+            self._m_fetch_failures = reg.counter(
+                "kvswap_io_fetch_failures_total",
+                "group runs unrecoverable after the retry budget")
 
     def _demote(self, batch_idx: int, gid: int, kv: np.ndarray) -> None:
         """Reuse-buffer eviction → warm-tier admission.  With an int8 disk
@@ -96,6 +111,44 @@ class KVCacheManager:
         self.warm.admit(self.layer, batch_idx, gid, kv,
                         scale=self.store.scale_of(self.layer, batch_idx, gid),
                         disk_nbytes=self.store.group_nbytes)
+
+    def read_run_with_retry(self, batch_idx: int,
+                            run: ReadRun) -> tuple[np.ndarray, np.ndarray]:
+        """Execute one coalesced run with bounded retry-with-backoff.
+
+        Transient faults are retried per ``self.retry`` with each modeled
+        backoff delay charged as accountant stall time — inside the active
+        ``track()`` scope, so retries show up in the same per-step
+        ``io_seconds`` as the read itself.  Anything unrecoverable
+        (persistent media errors, an exhausted budget, a real ``OSError``)
+        escalates as :class:`~repro.faults.errors.FetchFailed` carrying
+        the (layer, row, run) the serving layer needs to fail exactly one
+        request."""
+        read = lambda: self.store.read_run(self.layer, batch_idx,
+                                           run.start, run.count)
+        try:
+            if self.retry is None:
+                return read()
+            acc = getattr(self.store, "accountant", None)
+
+            def backoff(delay: float) -> None:
+                self.retries += 1
+                if self._obs is not None and self._obs.enabled:
+                    self._m_retries.inc()
+                if acc is not None:
+                    acc.charge_stall(delay)
+
+            return call_with_retries(read, policy=self.retry,
+                                     on_backoff=backoff)
+        except (StorageFault, OSError) as exc:
+            self.fetch_failures += 1
+            if self._obs is not None and self._obs.enabled:
+                self._m_fetch_failures.inc()
+            raise FetchFailed(
+                f"layer {self.layer} row {batch_idx} groups "
+                f"[{run.start},{run.start + run.count}) unrecoverable: {exc}",
+                layer=self.layer, row=batch_idx, start=run.start,
+                count=run.count) from exc
 
     def fetch(self, group_ids: np.ndarray, group_mask: np.ndarray) -> MappingTable:
         """Resolve selected groups: reuse hits stay put, warm-tier hits are
@@ -145,7 +198,7 @@ class KVCacheManager:
                 self._m_plan_groups.inc(st["groups_read"])
                 self._m_plan_wasted.inc(st["groups_wasted"])
             for run in plan:
-                k_r, v_r = self.store.read_run(self.layer, bi, run.start, run.count)
+                k_r, v_r = self.read_run_with_retry(bi, run)
                 for gid in run.ids:
                     off = gid - run.start
                     kv = np.stack([k_r[off], v_r[off]], axis=1)  # [G, 2, Hkv, d]

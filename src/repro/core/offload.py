@@ -118,6 +118,9 @@ class IOTracker:
     warm_bytes: int = 0
     warm_requests: int = 0
     warm_seconds: float = 0.0
+    # modeled seconds with no bytes moved (flash-GC stalls, retry backoff);
+    # also folded into read_seconds so io totals stay one number
+    stall_seconds: float = 0.0
 
 
 class IOAccountant:
@@ -170,6 +173,9 @@ class IOAccountant:
                                    "warm-tier serves"),
                 "warm_seconds": c("kvswap_warm_served_seconds_total",
                                   "modeled warm-tier serve seconds"),
+                "stall_seconds": c("kvswap_io_stall_seconds_total",
+                                   "modeled stall seconds (GC spikes + "
+                                   "retry backoff), also in read_seconds"),
             }
 
     def reset(self) -> None:
@@ -183,6 +189,7 @@ class IOAccountant:
             self.warm_bytes = 0
             self.warm_requests = 0
             self.warm_seconds = 0.0
+            self.stall_seconds = 0.0
             if self._metrics is not None:
                 for m in self._metrics.values():
                     m._reset()
@@ -260,6 +267,25 @@ class IOAccountant:
             tr.warm_seconds += seconds
         return seconds
 
+    def charge_stall(self, seconds: float) -> float:
+        """Charge modeled stall time with no bytes moved: injected flash-GC
+        spikes and retry backoff (docs/robustness.md).  Folded into
+        ``read_seconds`` so every existing ``io_seconds`` consumer —
+        :class:`StepStats`, pipeline overlap, SLO attainment — prices the
+        stall without new plumbing, plus a dedicated ``stall_seconds``
+        lane so fault reports can split it back out."""
+        with self._lock:
+            self.read_seconds += seconds
+            self.stall_seconds += seconds
+            m = self._metrics
+            if m is not None:
+                m["read_seconds"].inc(seconds)
+                m["stall_seconds"].inc(seconds)
+        for tr in self._trackers():
+            tr.read_seconds += seconds
+            tr.stall_seconds += seconds
+        return seconds
+
     def snapshot(self) -> dict:
         return {
             "read_bytes": self.read_bytes,
@@ -271,6 +297,7 @@ class IOAccountant:
             "warm_bytes": self.warm_bytes,
             "warm_requests": self.warm_requests,
             "warm_seconds": self.warm_seconds,
+            "stall_seconds": self.stall_seconds,
             # per-source serve breakdown: bytes delivered to fetches by the
             # disk tier vs the host-RAM warm tier (both in disk-read units)
             "served_by_source": {

@@ -78,7 +78,14 @@ class PrefetchWorker:
     * at most ``max_pending`` requests queued; ``submit`` blocks (or raises
       :class:`PrefetchQueueFull` with ``block=False``) beyond that;
     * ``close()`` cancels queued requests, lets in-flight ones finish, and
-      joins the threads.
+      joins the threads;
+    * **worker threads survive every request failure** (docs/robustness.md):
+      a raised fetch resolves only *that* request's future — the original
+      exception object, enriched with ``prefetch_layer``/``prefetch_args``
+      context — and the thread goes back to the queue.  ``deaths`` counts
+      threads lost to failures outside any request (should stay 0) and
+      ``dropped_errors`` counts exceptions that had no live future left to
+      carry them (consumer cancelled first).
     """
 
     def __init__(
@@ -109,6 +116,8 @@ class PrefetchWorker:
         self._seq = itertools.count()
         self._shutdown = False
         self.serviced = 0
+        self.deaths = 0         # worker threads lost outside a request
+        self.dropped_errors = 0  # failures with no live future to carry them
         self._threads = [
             threading.Thread(target=self._run, name=f"{name}-{i}", daemon=True)
             for i in range(n_threads)
@@ -158,55 +167,88 @@ class PrefetchWorker:
         return best
 
     def _run(self) -> None:
-        while True:
-            with self._cv:
-                req = self._pick()
-                while req is None:
-                    if self._shutdown:
-                        return
-                    self._cv.wait()
-                    req = self._pick()
-                self._pending[req.layer].popleft()
-                self._n_pending -= 1
-                self._active.add(req.layer)
-                self._cv.notify_all()
-            ok = False
-            try:
-                if not req.future.set_running_or_notify_cancel():
-                    continue  # consumer cancelled while queued
-                t0 = time.perf_counter()
-                if self._accountant is not None:
-                    with self._accountant.track() as tr:
-                        table = self._fetch_fn(req.layer, *req.args)
-                    res = PrefetchResult(
-                        table=table,
-                        io_seconds=tr.read_seconds + tr.warm_seconds,
-                        io_bytes=tr.read_bytes, io_requests=tr.read_requests,
-                        wall_seconds=time.perf_counter() - t0)
-                else:
-                    table = self._fetch_fn(req.layer, *req.args)
-                    res = PrefetchResult(
-                        table=table, wall_seconds=time.perf_counter() - t0)
-                obs = self._obs
-                if obs is not None and obs.enabled:
-                    obs.tracer.add(
-                        f"fetch L{req.layer}",
-                        threading.current_thread().name, cat="prefetch",
-                        wall_t0=obs.tracer.now_wall() - res.wall_seconds,
-                        wall_dur=res.wall_seconds,
-                        args={"layer": req.layer,
-                              "modeled_io_s": res.io_seconds,
-                              "read_bytes": res.io_bytes})
-                req.future.set_result(res)
-                ok = True
-            except BaseException as exc:  # propagate to the consumer
-                req.future.set_exception(exc)
-            finally:
+        try:
+            while True:
                 with self._cv:
-                    if ok:
-                        self.serviced += 1
-                    self._active.discard(req.layer)
+                    req = self._pick()
+                    while req is None:
+                        if self._shutdown:
+                            return
+                        self._cv.wait()
+                        req = self._pick()
+                    self._pending[req.layer].popleft()
+                    self._n_pending -= 1
+                    self._active.add(req.layer)
                     self._cv.notify_all()
+                self._serve(req)
+        except BaseException:
+            # nothing in _serve lets an exception out, so only queue
+            # bookkeeping can land here; count the death so harnesses can
+            # assert it never happens, then re-raise for the traceback
+            with self._cv:
+                self.deaths += 1
+                self._cv.notify_all()
+            raise
+
+    def _serve(self, req: _Request) -> None:
+        """Service one request.  Never raises: success and failure both
+        resolve ``req.future``, and the worker thread lives on either way
+        (a dead worker would silently serialize every later layer)."""
+        ok = False
+        try:
+            if not req.future.set_running_or_notify_cancel():
+                return  # consumer cancelled while queued
+            t0 = time.perf_counter()
+            if self._accountant is not None:
+                with self._accountant.track() as tr:
+                    table = self._fetch_fn(req.layer, *req.args)
+                res = PrefetchResult(
+                    table=table,
+                    io_seconds=tr.read_seconds + tr.warm_seconds,
+                    io_bytes=tr.read_bytes, io_requests=tr.read_requests,
+                    wall_seconds=time.perf_counter() - t0)
+            else:
+                table = self._fetch_fn(req.layer, *req.args)
+                res = PrefetchResult(
+                    table=table, wall_seconds=time.perf_counter() - t0)
+            obs = self._obs
+            if obs is not None and obs.enabled:
+                obs.tracer.add(
+                    f"fetch L{req.layer}",
+                    threading.current_thread().name, cat="prefetch",
+                    wall_t0=obs.tracer.now_wall() - res.wall_seconds,
+                    wall_dur=res.wall_seconds,
+                    args={"layer": req.layer,
+                          "modeled_io_s": res.io_seconds,
+                          "read_bytes": res.io_bytes})
+            req.future.set_result(res)
+            ok = True
+        except BaseException as exc:  # propagate to the consumer
+            # surface the *original* exception (callers match on its type)
+            # enriched with request context; some exception types forbid
+            # new attributes, hence the guard
+            try:
+                exc.prefetch_layer = req.layer
+                exc.prefetch_args = req.args
+            except (AttributeError, TypeError):
+                pass
+            try:
+                req.future.set_exception(exc)
+            except BaseException:
+                # future already cancelled/completed — the error has no
+                # consumer; count it instead of killing the thread
+                with self._cv:
+                    self.dropped_errors += 1
+        finally:
+            with self._cv:
+                if ok:
+                    self.serviced += 1
+                self._active.discard(req.layer)
+                self._cv.notify_all()
+
+    def alive_threads(self) -> int:
+        """Worker threads still running (harness assertion helper)."""
+        return sum(1 for t in self._threads if t.is_alive())
 
     # -- lifecycle --------------------------------------------------------
     def close(self, *, wait: bool = True, timeout: float = 10.0) -> None:
@@ -247,6 +289,7 @@ class DoubleBuffer:
     def __init__(self, depth: int = 2):
         self.depth = depth
         self._slots: dict[int, Future] = {}
+        self.drained_errors = 0
 
     def stage(self, key: int, future: Future) -> None:
         if key in self._slots:
@@ -263,12 +306,22 @@ class DoubleBuffer:
     def pending(self) -> int:
         return len(self._slots)
 
-    def drain(self) -> None:
-        """Wait out / discard staged results (error-path cleanup)."""
+    def drain(self) -> int:
+        """Wait out / discard staged results (error-path cleanup).
+
+        Returns how many discarded results carried an exception (also
+        accumulated on ``drained_errors``) so error paths can report what
+        they threw away instead of swallowing it silently.  Only
+        ``Exception`` is absorbed — ``KeyboardInterrupt``/``SystemExit``
+        still propagate.
+        """
+        errors = 0
         for key in sorted(self._slots):
             fut = self._slots.pop(key)
             if not fut.cancel():
                 try:
                     fut.result()
-                except BaseException:
-                    pass
+                except Exception:
+                    errors += 1
+        self.drained_errors += errors
+        return errors

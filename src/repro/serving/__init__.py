@@ -1,7 +1,8 @@
-from repro.serving.api import Request, ServeSession
+from repro.serving.api import DegradationPolicy, Request, ServeSession
 from repro.serving.decode import (KVSwapServeConfig, attach_kvswap_adapters,
                                   flush_rolling, init_cache, prefill,
                                   serve_step)
+from repro.serving.errors import RequestRejected
 from repro.serving.metrics import (SLOClass, aggregate_requests,
                                    per_request_breakdown, request_record)
 from repro.serving.sampling import SamplingParams, make_row_sampler
@@ -10,7 +11,8 @@ from repro.serving.trace import (Trace, TraceRequest, burst_trace,
                                  chat_trace, doc_trace, replay)
 
 __all__ = ["KVSwapServeConfig", "attach_kvswap_adapters", "flush_rolling",
-           "init_cache", "prefill", "serve_step", "BatchServer", "Request",
+           "init_cache", "prefill", "serve_step", "BatchServer",
+           "DegradationPolicy", "Request", "RequestRejected",
            "ServeSession", "SamplingParams", "make_row_sampler",
            "SLOClass", "aggregate_requests", "per_request_breakdown",
            "request_record", "Trace", "TraceRequest", "chat_trace",

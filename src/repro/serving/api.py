@@ -36,6 +36,7 @@ emits tokens bit-identical to the static lockstep path
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import itertools
 from typing import Callable, Iterator, Sequence
@@ -43,9 +44,11 @@ from typing import Callable, Iterator, Sequence
 import numpy as np
 
 from repro.core.engine import EngineConfig, KVSwapEngine, summarize_steps
+from repro.faults.errors import StorageFault
+from repro.serving.errors import RequestRejected
 from repro.serving.sampling import SamplingParams, make_row_sampler
 
-WAITING, RUNNING, DONE = "waiting", "running", "done"
+WAITING, RUNNING, DONE, FAILED = "waiting", "running", "done", "failed"
 
 
 @dataclasses.dataclass
@@ -75,6 +78,46 @@ class Request:
     first_token_at: float | None = None  # clock when token 0 was sampled
     finished_at: float | None = None
     cached_tokens: int = 0              # prompt tokens restored from the cache
+    error: str | None = None            # set iff state == FAILED
+
+
+@dataclasses.dataclass(frozen=True)
+class DegradationPolicy:
+    """Load-shedding ladder for sustained storage latency inflation.
+
+    The session watches decode-step *modeled* latency
+    (``pipelined_seconds``): the first ``baseline_steps`` steps establish
+    a healthy median, after which a rolling ``window``-step median is
+    compared against it.  The ladder (docs/robustness.md):
+
+    * **level 0** — healthy, everything admitted;
+    * **level 1** — recent median ≥ ``shed_factor`` × baseline:
+      new ``submit()`` calls are rejected (``reason="overload"``) while
+      already-admitted requests run to completion;
+    * **level 2** — still inflated after shedding and
+      ``reduce_n_select=True``: the engine's runtime critical-group
+      budget is halved (never below ``min_n_select``), trading accuracy
+      for I/O.  Level 2 breaks the bit-identity contract, which is why
+      it is opt-in.
+
+    Recovery walks back one level whenever the recent median falls to
+    ``recover_factor`` × baseline or better; at level < 2 the group
+    budget is restored.
+    """
+
+    baseline_steps: int = 16
+    window: int = 8
+    shed_factor: float = 4.0
+    recover_factor: float = 1.5
+    reduce_n_select: bool = False
+    min_n_select: int = 4
+
+    def __post_init__(self):
+        if self.baseline_steps < 1 or self.window < 1:
+            raise ValueError("baseline_steps and window must be >= 1")
+        if self.recover_factor > self.shed_factor:
+            raise ValueError("recover_factor must be <= shed_factor "
+                             "(the ladder would oscillate every step)")
 
 
 class _Slot:
@@ -101,26 +144,45 @@ class ServeSession:
 
     def __init__(self, model, params, engine_cfg: EngineConfig, *,
                  slots: int, calib_k: np.ndarray | None = None,
-                 adapter=None, prefix_cache=None, obs=None):
+                 adapter=None, prefix_cache=None, obs=None,
+                 faults=None, degrade: DegradationPolicy | None = None):
         kinds = getattr(model, "layer_kinds", ("kv",) * model.n_layers)
         if any(k != "kv" for k in kinds):
             raise ValueError(
                 "ServeSession requires attention-only models: recurrent "
                 "state layers have no per-row admission/retirement")
         self.engine = KVSwapEngine(model, params, engine_cfg, batch=slots,
-                                   calib_k=calib_k, adapter=adapter, obs=obs)
+                                   calib_k=calib_k, adapter=adapter, obs=obs,
+                                   faults=faults)
         # the engine resolves obs=None to the shared NULL_OBS; one handle
         # covers the whole stack so engine spans and request lifecycles
         # land on the same timeline
         self.obs = self.engine.obs
         self.n_slots = slots
         self.prefix_cache = prefix_cache
+        if faults is not None and prefix_cache is not None:
+            prefix_cache.use_faults(faults)
         self.now = 0.0                  # modeled seconds
         self.published_blocks = 0
         self.completed: dict[int, Request] = {}
+        self.failed: dict[int, Request] = {}
+        self.rejected = 0               # front-door rejections (never admitted)
+        self.recovered_rows = 0         # survivor rows replayed after a fault
+        self.publish_failures = 0       # best-effort publishes that errored
+        self.save_failures = 0          # manifest saves that errored
+        self.degrade = degrade
+        self._degrade_level = 0
+        self._base_n_select = self.engine.n_select
+        self._lat_baseline: list[float] = []
+        self._lat_window: collections.deque = collections.deque(
+            maxlen=degrade.window if degrade is not None else 1)
         self._rid = itertools.count()
         self._waiting: list[Request] = []
         self._slots: list[_Slot | None] = [None] * slots
+
+    def _count(self, name: str, delta: float = 1) -> None:
+        if self.obs.enabled:
+            self.obs.registry.counter(name).inc(delta)
 
     # -- submission ------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new: int, *,
@@ -133,7 +195,12 @@ class ServeSession:
         defaults to "already here"; future arrivals wait on the clock.
         ``sampler`` overrides ``sampling`` with a raw ``logits -> ids``
         callable (BatchServer compatibility).  ``slo_class`` is an opaque
-        label the trace harness uses to bucket attainment per class."""
+        label the trace harness uses to bucket attainment per class.
+
+        Refusals raise the typed :class:`~repro.serving.errors.\
+RequestRejected` (a ``ValueError``) and count on
+        ``kvswap_requests_rejected`` — rejection is pure bookkeeping and
+        never touches the engine, so running requests are unperturbed."""
         if max_new < 1:
             raise ValueError("max_new must be >= 1")
         n_prompt = int(np.asarray(prompt).reshape(-1).shape[0])
@@ -143,9 +210,24 @@ class ServeSession:
         if n_prompt + max_new > cap:
             # reject at the front door: admitted-then-overflowing would crash
             # decode_step mid-flight and take the whole batch down with it
-            raise ValueError(
+            self.rejected += 1
+            self._count("kvswap_requests_rejected")
+            raise RequestRejected(
+                "capacity",
                 f"prompt ({n_prompt}) + max_new ({max_new}) exceeds the "
-                f"engine's KV capacity ({cap} tokens); raise cfg.max_seq")
+                f"engine's KV capacity ({cap} tokens); raise cfg.max_seq",
+                prompt_tokens=n_prompt, max_new=int(max_new), cap_tokens=cap)
+        if self._degrade_level >= 1:
+            # load shedding (degradation ladder level >= 1): protect the
+            # requests already running instead of piling more I/O on a
+            # storage stack that is visibly stalling
+            self.rejected += 1
+            self._count("kvswap_requests_rejected")
+            raise RequestRejected(
+                "overload",
+                f"session is shedding load (degradation level "
+                f"{self._degrade_level}); resubmit later",
+                degradation_level=self._degrade_level)
         req = Request(rid=next(self._rid),
                       prompt=np.asarray(prompt).reshape(-1).astype(np.int64),
                       max_new=int(max_new), stop_ids=tuple(stop_ids),
@@ -170,7 +252,17 @@ class ServeSession:
                 break
             # dequeue only after the admission succeeds, so an admission
             # failure leaves the request visible instead of losing it
-            logits = self.engine.admit_row(i, due.prompt, self.prefix_cache)
+            try:
+                logits = self.engine.admit_row(i, due.prompt, self.prefix_cache)
+            except StorageFault as exc:
+                # admit_row rolled the slot back (failure atomicity), so the
+                # slot is reusable; the request fails terminally — storage
+                # faults are not the submitter's doing, so this is a FAILED
+                # outcome, not a rejection
+                self._waiting.remove(due)
+                due.output = np.asarray([], np.int64)
+                self._terminal_failure(due, i, exc, events)
+                continue
             self._waiting.remove(due)
             rep = self.engine.prefill_report
             self.now += rep["modeled_seconds"]
@@ -192,8 +284,15 @@ class ServeSession:
                 [req.prompt, np.asarray(slot.out, np.int64)])
             # manifest save is deferred to drain()/close(): one rewrite per
             # drain, not one per retirement
-            self.published_blocks += self.engine.publish(
-                self.prefix_cache, tokens={i: history}, rows=[i], save=False)
+            try:
+                self.published_blocks += self.engine.publish(
+                    self.prefix_cache, tokens={i: history}, rows=[i], save=False)
+            except StorageFault:
+                # publishing is best-effort cache warming: the request's
+                # tokens are already complete, so a failed publish costs
+                # future warm prefills, never this request
+                self.publish_failures += 1
+                self._count("kvswap_publish_failures_total")
         self.engine.retire_row(i)
         req.output = np.asarray(slot.out, np.int64)
         req.state, req.finished_at, req.slot = DONE, self.now, None
@@ -232,6 +331,131 @@ class ServeSession:
                model_t0=req.first_token_at, instant=True,
                args={"rid": req.rid})
         metrics.publish_request(self.obs.registry, rec)
+
+    # -- failure handling (docs/robustness.md) ---------------------------
+    def _terminal_failure(self, req: Request, i: int, exc: BaseException,
+                          events: list) -> None:
+        """Move one request to the FAILED terminal state.  Its partial
+        output (possibly empty) stays on ``req.output`` and the typed
+        cause on ``req.error``; nothing about any *other* request is
+        touched."""
+        req.state, req.finished_at, req.slot = FAILED, self.now, None
+        req.error = f"{type(exc).__name__}: {exc}"
+        self.failed[req.rid] = req
+        self._count("kvswap_requests_failed_total")
+        if self.obs.enabled:
+            self.obs.tracer.add(
+                f"r{req.rid} failed", "requests", cat="request",
+                model_t0=self.now, instant=True,
+                args={"rid": req.rid, "error": req.error})
+        events.append({"type": "fail", "rid": req.rid, "slot": i,
+                       "t": self.now, "error": req.error})
+
+    def _fail_slot(self, i: int, slot: _Slot, exc: BaseException,
+                   events: list) -> None:
+        req = slot.req
+        req.output = np.asarray(slot.out, np.int64)
+        self._slots[i] = None
+        self._terminal_failure(req, i, exc, events)
+
+    def _replay_slot(self, i: int, slot: _Slot) -> None:
+        """Rebuild one survivor row after a decode fault tore the batch.
+
+        The row is re-admitted cold and every token it has sampled so far
+        is decoded back in **alone** (all other rows stay masked out, so
+        no bystander state moves).  A row's numeric stream depends only on
+        its own state, so the replay reproduces bit-for-bit the KV, tail,
+        and logits the row had when the fault hit — including completing
+        the decode step that failed.  Modeled replay time is charged to
+        the session clock: recovery is visible latency, not free.
+        """
+        req = slot.req
+        logits = np.asarray(self.engine.admit_row(i, req.prompt, None))
+        self.now += self.engine.prefill_report["modeled_seconds"]
+        toks = np.zeros(self.n_slots, dtype=np.int64)
+        for tok in slot.out:
+            toks[i] = tok
+            logits = np.asarray(self.engine.decode_step(toks))[i]
+            self.now += self.engine.step_log[-1].pipelined_seconds
+        slot.logits = logits[None, :]
+        # mask the row back out so the next survivor replays alone;
+        # _recover_from_decode_fault reactivates every survivor at the end
+        self.engine.deactivate_row(i)
+
+    def _recover_from_decode_fault(self, exc: StorageFault,
+                                   events: list) -> None:
+        """Degradation rung 2: a storage fault escaped the retry budget
+        mid-decode.  The failed step left every running row's cross-layer
+        state inconsistent (some layers appended, some not), so all rows
+        are retired; the culprit request (``exc.row``, attributed by
+        :class:`~repro.faults.errors.FetchFailed`) fails terminally and
+        every other request is replayed from its recorded tokens.  Without
+        attribution the blast radius is the whole running set — still a
+        bounded, typed outcome, never a crash."""
+        row = getattr(exc, "row", None)
+        running = [(i, self._slots[i]) for i in self._active()]
+        for i, _ in running:
+            self.engine.retire_row(i)
+        replayed: list[int] = []
+        for i, slot in running:
+            if row is None or i == row:
+                self._fail_slot(i, slot, exc, events)
+                continue
+            try:
+                self._replay_slot(i, slot)
+            except StorageFault as replay_exc:
+                # the survivor hit its own unrecoverable fault (e.g. the
+                # same grown bad region); free whatever the partial replay
+                # left behind and fail it too — bounded, per-request
+                self.engine.retire_row(i)
+                self._fail_slot(i, slot, replay_exc, events)
+                continue
+            replayed.append(i)
+            self.recovered_rows += 1
+            self._count("kvswap_rows_recovered_total")
+        for i in replayed:
+            self.engine.reactivate_row(i)
+        culprit = next((s.req.rid for i, s in running if i == row), None)
+        events.append({"type": "recover", "t": self.now,
+                       "failed_rid": culprit,
+                       "recovered_rows": len(replayed)})
+
+    def _note_step_latency(self, seconds: float) -> None:
+        """Feed one decode step's modeled latency to the degradation
+        ladder (no-op without a :class:`DegradationPolicy`)."""
+        pol = self.degrade
+        if pol is None:
+            return
+        if len(self._lat_baseline) < pol.baseline_steps:
+            self._lat_baseline.append(float(seconds))
+            return
+        self._lat_window.append(float(seconds))
+        if len(self._lat_window) < pol.window:
+            return
+        base = float(np.median(self._lat_baseline))
+        if base <= 0.0:
+            return
+        ratio = float(np.median(self._lat_window)) / base
+        max_level = 2 if pol.reduce_n_select else 1
+        if ratio >= pol.shed_factor and self._degrade_level < max_level:
+            self._degrade_level += 1
+            if self._degrade_level == 2:
+                self.engine.set_n_select(
+                    max(pol.min_n_select, self.engine.n_select // 2))
+            self._lat_window.clear()   # fresh window per transition
+            self._count("kvswap_degrade_transitions_total")
+            if self.obs.enabled:
+                self.obs.registry.gauge("kvswap_degradation_level").set(
+                    self._degrade_level)
+        elif ratio <= pol.recover_factor and self._degrade_level > 0:
+            self._degrade_level -= 1
+            if self._degrade_level < 2:
+                self.engine.set_n_select(self._base_n_select)
+            self._lat_window.clear()
+            self._count("kvswap_degrade_transitions_total")
+            if self.obs.enabled:
+                self.obs.registry.gauge("kvswap_degradation_level").set(
+                    self._degrade_level)
 
     # -- the scheduler iteration -----------------------------------------
     def step(self) -> list[dict]:
@@ -277,8 +501,16 @@ class ServeSession:
         # prefill, which the sampling loop above has already passed)
         active = self._active()
         if active:
-            logits = np.asarray(self.engine.decode_step(toks))
+            try:
+                logits = np.asarray(self.engine.decode_step(toks))
+            except StorageFault as exc:
+                # unrecoverable mid-step fault: fail the culprit request,
+                # replay the rest (docs/robustness.md rung 2) — the session
+                # itself never crashes
+                self._recover_from_decode_fault(exc, events)
+                return events
             self.now += self.engine.step_log[-1].pipelined_seconds
+            self._note_step_latency(self.engine.step_log[-1].pipelined_seconds)
             for i in active:
                 self._slots[i].logits = logits[i:i + 1]
         return events
@@ -290,12 +522,25 @@ class ServeSession:
             yield from self.step()
 
     def drain(self) -> dict[int, Request]:
-        """Run to completion; returns every completed request by id."""
+        """Run to completion; returns every completed request by id
+        (requests that failed terminally are in :attr:`failed`)."""
         for _ in self.stream():
             pass
         if self.prefix_cache is not None:
-            self.prefix_cache.save()
+            self._save_cache()
         return self.completed
+
+    def _save_cache(self) -> None:
+        """Persist the prefix-cache manifest, absorbing storage faults: the
+        manifest is an optimization for the *next* process, so a failed (or
+        crash-injected) save must not fail a drain whose tokens are already
+        complete.  A torn write is recovered at next open (empty index +
+        orphan GC, see ``cache/manifest.py``)."""
+        try:
+            self.prefix_cache.save()
+        except StorageFault:
+            self.save_failures += 1
+            self._count("kvswap_manifest_save_failures_total")
 
     def result(self, rid: int) -> np.ndarray:
         return self.completed[rid].output
@@ -328,6 +573,18 @@ class ServeSession:
             "completed_requests": len(done),
             "completed_tokens": tokens,
             "stopped_early": sum(r.stopped_early for r in done),
+            # robustness accounting (docs/robustness.md): every request the
+            # session refused or lost to storage faults, and what recovery
+            # cost — FAILED + rejected + completed must equal submissions
+            "failed_requests": len(self.failed),
+            "rejected_requests": self.rejected,
+            "recovered_rows": self.recovered_rows,
+            "publish_failures": self.publish_failures,
+            "save_failures": self.save_failures,
+            "io_retries": sum(m.retries for m in eng.managers),
+            "fetch_failures": sum(m.fetch_failures for m in eng.managers),
+            "stall_seconds": snap.get("stall_seconds", 0.0),
+            "degradation_level": self._degrade_level,
             "modeled_seconds": self.now,
             "goodput_tokens_per_s": tokens / self.now if self.now else 0.0,
             "waiting": len(self._waiting),
@@ -347,7 +604,7 @@ class ServeSession:
     # -- lifecycle --------------------------------------------------------
     def close(self) -> None:
         if self.prefix_cache is not None and self.published_blocks:
-            self.prefix_cache.save()   # publishes defer their manifest write
+            self._save_cache()   # publishes defer their manifest write
         self.engine.close()
 
     def __enter__(self):

@@ -91,6 +91,7 @@ class WarmTierStats:
     evicted: int = 0
     invalidated: int = 0
     rejected: int = 0          # admissions refused (entry alone over budget)
+    serve_errors: int = 0      # hits degraded to misses by internal failures
 
     @property
     def hit_rate(self) -> float:
@@ -141,6 +142,9 @@ class WarmTier:
                                  "entries dropped for coherence"),
                 "rejected": c("kvswap_warm_rejected_total",
                               "admissions refused (entry alone over budget)"),
+                "serve_errors": c("kvswap_warm_serve_errors_total",
+                                  "hits degraded to misses by internal "
+                                  "failures (fail-safe serve)"),
             }
         self._lock = threading.Lock()
         # key (layer, row, gid) -> _Entry; order = LRU (oldest first)
@@ -237,31 +241,45 @@ class WarmTier:
         A hit is exclusive: the entry pops (the caller promotes the group
         back into the reuse buffer) and its modeled memcpy+dequantize cost
         is charged to the accountant's *warm* lane.
+
+        Fail-safe (docs/robustness.md): the warm tier is an optimization,
+        never a correctness dependency, so any internal failure while
+        serving degrades to a miss — the caller falls through to the
+        authoritative disk read — instead of tearing the decode step.  The
+        popped entry is simply lost (exclusive-residency semantics already
+        allow that) and ``serve_errors`` counts the event.
         """
         if not self.enabled:
             return None
-        with self._lock:
-            entry = self._entries.pop((layer, row, gid), None)
-            if entry is None:
-                self.stats.misses += 1
-                self._minc("misses")
-                return None
-            self._uncharge(row, entry.charged)
-            self.stats.hits += 1
-            self._minc("hits")
-        obs = self._obs
-        if obs is not None and obs.enabled:
-            # hits are sparse enough to mark individually; admissions are
-            # every reuse eviction and stay counter-only
-            obs.tracer.add("warm_hit", "warm-tier", cat="warm",
-                           wall_t0=obs.tracer.now_wall(), instant=True,
-                           args={"layer": layer, "row": row, "group": gid})
-        out = (entry.q.astype(np.float32) * np.float32(entry.scale)).astype(dtype)
-        if self.accountant is not None:
-            self.accountant.charge_warm(
-                entry.disk_nbytes,
-                warm_serve_time(self.compute, entry.q.nbytes, out.nbytes))
-        return out
+        try:
+            with self._lock:
+                entry = self._entries.pop((layer, row, gid), None)
+                if entry is None:
+                    self.stats.misses += 1
+                    self._minc("misses")
+                    return None
+                self._uncharge(row, entry.charged)
+                self.stats.hits += 1
+                self._minc("hits")
+            obs = self._obs
+            if obs is not None and obs.enabled:
+                # hits are sparse enough to mark individually; admissions are
+                # every reuse eviction and stay counter-only
+                obs.tracer.add("warm_hit", "warm-tier", cat="warm",
+                               wall_t0=obs.tracer.now_wall(), instant=True,
+                               args={"layer": layer, "row": row, "group": gid})
+            out = (entry.q.astype(np.float32)
+                   * np.float32(entry.scale)).astype(dtype)
+            if self.accountant is not None:
+                self.accountant.charge_warm(
+                    entry.disk_nbytes,
+                    warm_serve_time(self.compute, entry.q.nbytes, out.nbytes))
+            return out
+        except Exception:
+            with self._lock:
+                self.stats.serve_errors += 1
+                self._minc("serve_errors")
+            return None
 
     # -- coherence --------------------------------------------------------
     def invalidate(self, layer: int, row: int, gid: int) -> None:
@@ -328,4 +346,5 @@ class WarmTier:
                 "evicted": self.stats.evicted,
                 "invalidated": self.stats.invalidated,
                 "rejected": self.stats.rejected,
+                "serve_errors": self.stats.serve_errors,
             }
