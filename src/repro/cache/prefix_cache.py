@@ -233,6 +233,38 @@ class PrefixCache:
         self._faults = plan
 
     # -- lookup -----------------------------------------------------------
+    def _walk_chain(self, tokens: np.ndarray) -> tuple[list[BlockMeta], int]:
+        """Walk ``tokens``'s block-ID chain until the first non-resident
+        block: ``(matched metas, full-block tokens offered)``.  Pure
+        metadata lookup — no pinning, no LRU movement, no stats, no I/O —
+        shared by :meth:`match` (which then touches/charges) and
+        :meth:`peek` (which must not)."""
+        out: list[BlockMeta] = []
+        chain = chain_blocks(tokens, self.cfg.block_tokens)
+        for blk in chain:
+            meta = self.manifest.blocks.get(blk.block_id)
+            if meta is None:
+                break
+            out.append(meta)
+        return out, sum(b.n_tokens for b in chain)
+
+    def peek(self, tokens: np.ndarray) -> int:
+        """Longest cached prefix of ``tokens`` in tokens — **observably
+        side-effect-free**.
+
+        The affinity router's scoring primitive: it hashes the prompt into
+        the same content-addressed chain :meth:`match` uses, but performs a
+        pure metadata walk — no pin, no LRU touch, no accountant charge, no
+        stats or obs mutation, and no slab I/O — so a front end may score
+        every replica's cache per routed request without perturbing any
+        replica's eviction order or hit-rate accounting (asserted by
+        ``tests/test_router.py``).  An unopened cache peeks 0.
+        """
+        if self.manifest is None:
+            return 0
+        matched, _ = self._walk_chain(tokens)
+        return sum(m.n_tokens for m in matched)
+
     def match(self, tokens: np.ndarray, *, max_tokens: int | None = None
               ) -> list[BlockMeta]:
         """Longest-prefix match: chain ``tokens`` and walk until a miss.
@@ -242,21 +274,23 @@ class PrefixCache:
         Matched blocks are LRU-touched deepest-first, so within one chain
         the root is always the most recently used — cold *suffixes* evict
         first.
+
+        Restore discipline: callers that go on to :meth:`read_chain` must
+        ``pin`` the returned metas first and ``unpin`` them on **every**
+        exit path (``try/finally``), including failed restores — a pin
+        leaked by an exception would make the block unevictable forever
+        (:class:`~repro.cache.policy.LRUPinPolicy` never victimizes pinned
+        blocks).  The engine's restore loops follow this discipline;
+        ``tests/test_prefix_cache.py`` pins it with a fault-injected
+        restore.
         """
         self.stats.lookups += 1
         if self._obs is not None:
             self._m["lookups"].inc()
-        out: list[BlockMeta] = []
         if self.manifest is None:
-            return out
-        chain = chain_blocks(tokens, self.cfg.block_tokens)
-        offered = sum(b.n_tokens for b in chain)
+            return []
+        out, offered = self._walk_chain(tokens)
         self.stats.lookup_tokens += offered
-        for blk in chain:
-            meta = self.manifest.blocks.get(blk.block_id)
-            if meta is None:
-                break
-            out.append(meta)
         if max_tokens is not None:
             while out and sum(m.n_tokens for m in out) > max_tokens:
                 out.pop()

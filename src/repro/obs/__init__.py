@@ -67,10 +67,14 @@ class Observability:
     and their metrics in one registry.
     """
 
-    def __init__(self, enabled: bool = True):
+    def __init__(self, enabled: bool = True, labels: dict | None = None):
         self.enabled = bool(enabled)
         self.tracer = SpanTracer(enabled=self.enabled)
-        self.registry = MetricsRegistry()
+        # instance labels (e.g. {"replica": "r0"}) stamp every kvswap_*
+        # series this handle's components create, so N engines in one
+        # process export N disjoint series sets instead of colliding; no
+        # labels keeps the historical bare-name series byte-identical
+        self.registry = MetricsRegistry(labels=labels)
         # modeled-clock cursor: advanced by the engine (admission modeled
         # seconds, per-step pipelined seconds) and re-synced by a serving
         # session whose clock can also jump to future arrivals

@@ -27,12 +27,22 @@ Thread safety: each metric carries its own lock; creation is guarded by a
 registry lock.  All operations are cheap enough for per-fetch hot paths,
 but the disabled-obs path never reaches them at all (the engine guards
 every call site with ``if obs.enabled``).
+
+Instance labels: several engines/sessions in one process (a multi-replica
+router fleet) would collide on shared series names — every replica's
+``kvswap_io_read_bytes_total`` would land on one counter.  A registry may
+therefore carry **default labels** (``MetricsRegistry(labels={"replica":
+"r0"})``) applied to every metric it creates, and each create call may add
+per-metric labels; a metric's identity becomes ``name{k="v",...}`` with
+sorted label keys.  The zero-label case renders bare names, so a
+single-replica process's ``snapshot()`` and ``to_prometheus()`` output is
+byte-identical to the unlabeled format (asserted by ``tests/test_obs.py``).
 """
 
 from __future__ import annotations
 
 import threading
-from typing import Iterable
+from typing import Iterable, Mapping
 
 from repro.utils import stats as stats_util
 
@@ -48,14 +58,36 @@ def _check_name(name: str) -> str:
     return name
 
 
+def _check_labels(labels: Mapping[str, str] | None) -> dict[str, str]:
+    out: dict[str, str] = {}
+    for key, value in (labels or {}).items():
+        _check_name(key)
+        value = str(value)
+        if any(c in value for c in '"\\\n'):
+            raise ValueError(f"invalid label value for {key!r}: {value!r}")
+        out[key] = value
+    return out
+
+
+def render_labels(labels: Mapping[str, str]) -> str:
+    """``{k="v",...}`` with sorted keys; empty string for no labels (the
+    byte-identity contract with unlabeled registries)."""
+    if not labels:
+        return ""
+    return "{" + ",".join(f'{k}="{v}"'
+                          for k, v in sorted(labels.items())) + "}"
+
+
 class Counter:
     """Monotonically increasing value (int or float)."""
 
     kind = "counter"
 
-    def __init__(self, name: str, help: str = ""):
+    def __init__(self, name: str, help: str = "",
+                 labels: Mapping[str, str] | None = None):
         self.name = _check_name(name)
         self.help = help
+        self.labels = _check_labels(labels)
         self._lock = threading.Lock()
         self._value = 0
 
@@ -83,9 +115,11 @@ class Gauge:
 
     kind = "gauge"
 
-    def __init__(self, name: str, help: str = ""):
+    def __init__(self, name: str, help: str = "",
+                 labels: Mapping[str, str] | None = None):
         self.name = _check_name(name)
         self.help = help
+        self.labels = _check_labels(labels)
         self._lock = threading.Lock()
         self._value = 0
 
@@ -119,9 +153,11 @@ class Histogram:
 
     kind = "histogram"
 
-    def __init__(self, name: str, help: str = ""):
+    def __init__(self, name: str, help: str = "",
+                 labels: Mapping[str, str] | None = None):
         self.name = _check_name(name)
         self.help = help
+        self.labels = _check_labels(labels)
         self._lock = threading.Lock()
         self._samples: list[float] = []
         self._sum = 0.0
@@ -151,39 +187,56 @@ class Histogram:
 
 
 class MetricsRegistry:
-    """Name-keyed collection of typed metrics.
+    """Series-keyed collection of typed metrics.
 
     ``counter()``/``gauge()``/``histogram()`` are get-or-create: the first
     call registers, later calls return the same object (re-registering
-    under a different type raises — a name means one thing).
+    under a different type raises — a series means one thing).  A series is
+    ``name`` plus its labels — the registry's default ``labels`` (set at
+    construction, e.g. ``{"replica": "r0"}`` for one fleet member) merged
+    with any per-call ``labels=``.  Registries with no labels anywhere key
+    by bare name, exactly as before.
     """
 
-    def __init__(self):
+    def __init__(self, labels: Mapping[str, str] | None = None):
         self._lock = threading.Lock()
+        self.labels = _check_labels(labels)
         self._metrics: dict[str, Counter | Gauge | Histogram] = {}
 
-    def _get_or_create(self, cls, name: str, help: str):
+    def _get_or_create(self, cls, name: str, help: str,
+                       labels: Mapping[str, str] | None = None):
+        merged = ({**self.labels, **_check_labels(labels)}
+                  if (self.labels or labels) else {})
+        key = _check_name(name) + render_labels(merged)
         with self._lock:
-            m = self._metrics.get(name)
+            m = self._metrics.get(key)
             if m is None:
-                m = self._metrics[name] = cls(name, help)
+                m = self._metrics[key] = cls(name, help, labels=merged)
             elif not isinstance(m, cls):
                 raise TypeError(
-                    f"metric {name!r} already registered as {m.kind}")
+                    f"metric {key!r} already registered as {m.kind}")
             return m
 
-    def counter(self, name: str, help: str = "") -> Counter:
-        return self._get_or_create(Counter, name, help)
+    def counter(self, name: str, help: str = "",
+                labels: Mapping[str, str] | None = None) -> Counter:
+        return self._get_or_create(Counter, name, help, labels)
 
-    def gauge(self, name: str, help: str = "") -> Gauge:
-        return self._get_or_create(Gauge, name, help)
+    def gauge(self, name: str, help: str = "",
+              labels: Mapping[str, str] | None = None) -> Gauge:
+        return self._get_or_create(Gauge, name, help, labels)
 
-    def histogram(self, name: str, help: str = "") -> Histogram:
-        return self._get_or_create(Histogram, name, help)
+    def histogram(self, name: str, help: str = "",
+                  labels: Mapping[str, str] | None = None) -> Histogram:
+        return self._get_or_create(Histogram, name, help, labels)
 
-    def get(self, name: str):
+    def get(self, name: str, labels: Mapping[str, str] | None = None):
+        """Look up a series by bare name (an unlabeled registry) or by
+        name + explicit labels; ``labels=None`` on a labeled registry
+        resolves through the registry's own defaults."""
+        merged = ({**self.labels, **_check_labels(labels)}
+                  if (self.labels or labels) else {})
         with self._lock:
-            return self._metrics.get(name)
+            return self._metrics.get(name + render_labels(merged))
 
     def __len__(self) -> int:
         with self._lock:
@@ -196,37 +249,48 @@ class MetricsRegistry:
     # -- exporters --------------------------------------------------------
     def snapshot(self) -> dict:
         """JSON-able view: counters/gauges as plain values, histograms as
-        ``{count, sum, p50, p95, p99}``.  Deterministic key order (sorted)."""
+        ``{count, sum, p50, p95, p99}``.  Deterministic key order (sorted);
+        keys are series keys — bare names for unlabeled registries (the
+        historical format, byte-identical), ``name{k="v"}`` otherwise, so
+        snapshots of differently-labeled registries merge without
+        collisions (``dict.update`` is a fleet aggregation)."""
         with self._lock:
             items = sorted(self._metrics.items())
         out = {}
-        for name, m in items:
+        for key, m in items:
             if isinstance(m, Histogram):
-                out[name] = {"count": m.count, "sum": m.sum,
-                             **m.percentiles()}
+                out[key] = {"count": m.count, "sum": m.sum,
+                            **m.percentiles()}
             else:
-                out[name] = m.value
+                out[key] = m.value
         return out
 
     def to_prometheus(self) -> str:
         """Prometheus text exposition (version 0.0.4).  Histograms render
         summary-style: ``{name}{quantile="0.5"}`` lines plus ``_sum`` and
-        ``_count`` — exact order statistics, not bucketed estimates."""
+        ``_count`` — exact order statistics, not bucketed estimates.
+        HELP/TYPE headers are emitted once per metric *family* (bare name);
+        labeled series render their labels on every sample line."""
         with self._lock:
             items = sorted(self._metrics.items())
         lines: list[str] = []
-        for name, m in items:
-            if m.help:
-                lines.append(f"# HELP {name} {m.help}")
+        seen_family: set[str] = set()
+        for _, m in items:
+            if m.name not in seen_family:
+                seen_family.add(m.name)
+                if m.help:
+                    lines.append(f"# HELP {m.name} {m.help}")
+                kind = "summary" if isinstance(m, Histogram) else m.kind
+                lines.append(f"# TYPE {m.name} {kind}")
+            tag = render_labels(m.labels)
             if isinstance(m, Histogram):
-                lines.append(f"# TYPE {name} summary")
-                pct = m.percentiles()
-                for key, val in pct.items():
+                for key, val in m.percentiles().items():
                     q = float(key[1:]) / 100.0
-                    lines.append(f'{name}{{quantile="{q:g}"}} {val}')
-                lines.append(f"{name}_sum {m.sum}")
-                lines.append(f"{name}_count {m.count}")
+                    quantiled = render_labels(
+                        {**m.labels, "quantile": f"{q:g}"})
+                    lines.append(f"{m.name}{quantiled} {val}")
+                lines.append(f"{m.name}_sum{tag} {m.sum}")
+                lines.append(f"{m.name}_count{tag} {m.count}")
             else:
-                lines.append(f"# TYPE {name} {m.kind}")
-                lines.append(f"{name} {m.value}")
+                lines.append(f"{m.name}{tag} {m.value}")
         return "\n".join(lines) + ("\n" if lines else "")

@@ -1,0 +1,44 @@
+"""Multi-replica front end with KV-affinity routing.
+
+N independent serving replicas (each its own
+:class:`~repro.serving.api.ServeSession` + :class:`~repro.cache.
+PrefixCache` directory) behind one request API:
+
+* :class:`~repro.router.pool.ReplicaPool` — registry + drain/quiesce
+  lifecycle, per-replica load and affinity signals;
+* :class:`~repro.router.policy.RoutingPolicy` — pluggable policies:
+  :class:`~repro.router.policy.RoundRobin`,
+  :class:`~repro.router.policy.LeastLoaded`, and the headline
+  :class:`~repro.router.policy.PrefixAffinityRouter` that scores
+  replicas by longest cached prefix via the side-effect-free
+  ``PrefixCache.peek()`` (the content-addressed block-ID chain makes KV
+  locality readable from metadata alone);
+* :class:`~repro.router.frontend.FrontEnd` — admission with typed
+  router-tier shedding, laggard-first lockstep stepping of the replica
+  clocks, global request ids, fleet stats/SLO aggregation.
+
+Usage::
+
+    pool = ReplicaPool()
+    for i in range(3):
+        pool.add(f"r{i}", ServeSession(..., prefix_cache=PrefixCache(...),
+                                       obs=Observability(
+                                           labels={"replica": f"r{i}"})))
+    front = FrontEnd(pool, PrefixAffinityRouter(), max_queue_depth=8)
+    rid = front.submit({"prompt": ids, "max_tokens": 32, "tenant": "t0"})
+    front.drain()
+    tokens = front.result(rid)
+
+See docs/architecture.md ("Multi-replica routing") for the scoring
+formula and the lockstep-clock rationale, docs/tuning.md for the knobs.
+"""
+
+from repro.router.frontend import FrontEnd
+from repro.router.policy import (LeastLoaded, PrefixAffinityRouter,
+                                 RoundRobin, RoutingPolicy)
+from repro.router.pool import (DRAINING, LIVE, QUIESCED, Replica,
+                               ReplicaPool)
+
+__all__ = ["FrontEnd", "LeastLoaded", "PrefixAffinityRouter", "RoundRobin",
+           "RoutingPolicy", "Replica", "ReplicaPool", "LIVE", "DRAINING",
+           "QUIESCED"]

@@ -8,7 +8,8 @@ from repro.serving.metrics import (SLOClass, aggregate_requests,
 from repro.serving.sampling import SamplingParams, make_row_sampler
 from repro.serving.scheduler import BatchServer
 from repro.serving.trace import (Trace, TraceRequest, burst_trace,
-                                 chat_trace, doc_trace, replay)
+                                 chat_trace, doc_trace,
+                                 mixed_tenant_trace, replay)
 
 __all__ = ["KVSwapServeConfig", "attach_kvswap_adapters", "flush_rolling",
            "init_cache", "prefill", "serve_step", "BatchServer",
@@ -16,4 +17,4 @@ __all__ = ["KVSwapServeConfig", "attach_kvswap_adapters", "flush_rolling",
            "ServeSession", "SamplingParams", "make_row_sampler",
            "SLOClass", "aggregate_requests", "per_request_breakdown",
            "request_record", "Trace", "TraceRequest", "chat_trace",
-           "doc_trace", "burst_trace", "replay"]
+           "doc_trace", "burst_trace", "mixed_tenant_trace", "replay"]

@@ -62,6 +62,7 @@ class Request:
     sampling: SamplingParams | None = None
     arrival: float = 0.0                # modeled seconds on the session clock
     slo_class: str = ""                 # trace-harness SLO class label
+    tenant: str = ""                    # opaque tenant label (routing/affinity)
     # raw ``logits [1, V] -> ids [1]`` override (BatchServer compatibility);
     # prefer ``sampling`` for new code
     sampler: Callable | None = dataclasses.field(default=None, repr=False)
@@ -190,12 +191,17 @@ class ServeSession:
                sampling: SamplingParams | None = None,
                sampler: Callable | None = None,
                arrival: float | None = None,
-               slo_class: str = "") -> int:
+               slo_class: str = "",
+               tenant: str = "") -> int:
         """Enqueue a request; returns its id.  ``arrival`` (modeled seconds)
         defaults to "already here"; future arrivals wait on the clock.
         ``sampler`` overrides ``sampling`` with a raw ``logits -> ids``
         callable (BatchServer compatibility).  ``slo_class`` is an opaque
-        label the trace harness uses to bucket attainment per class.
+        label the trace harness uses to bucket attainment per class;
+        ``tenant`` is an opaque workload-owner label (the multi-replica
+        router keys prefix affinity on it only indirectly — through the
+        token prefixes tenants actually share — but it is carried through
+        the lifecycle records so per-tenant breakdowns stay possible).
 
         Refusals raise the typed :class:`~repro.serving.errors.\
 RequestRejected` (a ``ValueError``) and count on
@@ -233,9 +239,36 @@ RequestRejected` (a ``ValueError``) and count on
                       max_new=int(max_new), stop_ids=tuple(stop_ids),
                       sampling=sampling, sampler=sampler,
                       arrival=float(self.now if arrival is None else arrival),
-                      slo_class=str(slo_class))
+                      slo_class=str(slo_class), tenant=str(tenant))
         self._waiting.append(req)
         return req.rid
+
+    # -- load / lifecycle introspection (the router's cheap signals) ------
+    @property
+    def queue_depth(self) -> int:
+        """Requests submitted but not yet admitted (waiting on a slot or on
+        their arrival time).  O(1) bookkeeping — routing polls this per
+        submission, so it must never touch the engine or build stats."""
+        return len(self._waiting)
+
+    @property
+    def active_rows(self) -> int:
+        """Engine rows currently occupied by running requests."""
+        return len(self._active())
+
+    @property
+    def has_work(self) -> bool:
+        """True while a scheduler iteration would make progress (waiting
+        or running requests exist) — the router's lockstep-loop predicate."""
+        return bool(self._waiting or self._active())
+
+    @property
+    def degradation_level(self) -> int:
+        """Current :class:`DegradationPolicy` ladder rung (0 = healthy).
+        Public because the affinity router reuses this hysteresis signal
+        as its overload penalty — a replica that is already shedding load
+        should not attract more, however warm its cache."""
+        return self._degrade_level
 
     # -- scheduling internals --------------------------------------------
     def _active(self) -> list[int]:
@@ -558,6 +591,8 @@ RequestRejected` (a ``ValueError``) and count on
         tokens per modeled second — the benchmark's headline metric)."""
         done = list(self.completed.values())
         tokens = sum(len(r.output) for r in done)
+        prompt_tokens = sum(len(r.prompt) for r in done)
+        cached_prompt = sum(r.cached_tokens for r in done)
         eng = self.engine
         snap = eng.accountant.snapshot()
         served = snap["warm_bytes"] + snap["read_bytes"]
@@ -599,6 +634,13 @@ RequestRejected` (a ``ValueError``) and count on
             # breakdown (same disk-read units), no reach into tier internals
             "warm_bytes": snap["warm_bytes"],
             "warm_hit_rate": snap["warm_bytes"] / served if served else 0.0,
+            # prefix cache (completed requests only, same population as the
+            # token counts above): share of prompt tokens restored from the
+            # cache instead of prefilled — the affinity router's headline
+            "prompt_tokens": prompt_tokens,
+            "cached_prompt_tokens": cached_prompt,
+            "prefix_hit_rate": (cached_prompt / prompt_tokens
+                                if prompt_tokens else 0.0),
         }
 
     # -- lifecycle --------------------------------------------------------

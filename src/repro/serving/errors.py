@@ -24,6 +24,13 @@ class RequestRejected(ValueError):
       capacity (admitting it would crash decode mid-flight);
     * ``"overload"`` — the degradation ladder is shedding new work
       (sustained step-latency inflation, see ``DegradationPolicy``).
+
+    The multi-replica front end (:mod:`repro.router`) raises the same
+    type for router-tier shedding, before any replica session is touched:
+
+    * ``"no_live_replicas"`` — every replica is draining or quiesced;
+    * ``"router_overload"``  — all live replicas are at the front end's
+      ``max_queue_depth`` admission bound.
     """
 
     def __init__(self, reason: str, message: str = "", **context):

@@ -74,6 +74,7 @@ def request_record(req) -> dict:
     return {
         "rid": req.rid,
         "slo_class": req.slo_class,
+        "tenant": req.tenant,
         "arrival": req.arrival,
         "admitted_at": req.admitted_at,
         "first_token_at": req.first_token_at,

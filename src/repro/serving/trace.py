@@ -10,14 +10,18 @@ TTFT/TPOT/SLO numbers.  It is the standing yardstick later serving PRs
 (affinity routing, disaggregated prefill, lookahead prefetch) are judged
 against.
 
-Format (version 1)::
+Format (version 2)::
 
-    {"format": "kvswap-trace", "version": 1, "workload": "chat", "seed": 7,
+    {"format": "kvswap-trace", "version": 2, "workload": "chat", "seed": 7,
      "vocab_size": 512, "slo_classes": {"interactive":
      {"ttft_s": 0.25, "tpot_s": 0.05}, ...}}
     {"rid": 0, "arrival": 0.0, "max_new": 12, "slo_class": "interactive",
-     "segments": [[7000003, 48], [7000004, 16]]}
+     "tenant": "t0", "segments": [[7000003, 48], [7000004, 16]]}
     ...
+
+Version history: v1 had no ``tenant`` field; v2 adds it (written only
+when non-empty, read as ``""`` when absent), so every v1 file loads
+unchanged while future versions are still rejected.
 
 Prompts are stored as **segments** — ``[seed, n_tokens]`` pairs
 materialized with ``np.random.default_rng(seed)`` — rather than literal
@@ -39,6 +43,8 @@ Three generators cover the paper's workload shapes:
   outputs (prefill heavy).
 * :func:`burst_trace` — Poisson interarrival bursts separated by quiet
   gaps, mixed SLO classes (queueing heavy).
+* :func:`mixed_tenant_trace` — interleaved per-tenant chat conversations
+  tagged with ``tenant`` labels (the affinity-routing shape).
 
 Determinism contract: replaying the same trace through an identically
 configured **synchronous** session is bit-deterministic end to end
@@ -59,7 +65,7 @@ from repro.serving.metrics import (SLOClass, aggregate_requests,
                                    per_request_breakdown)
 
 TRACE_FORMAT = "kvswap-trace"
-TRACE_VERSION = 1
+TRACE_VERSION = 2
 
 # Segment seeds are derived as ``trace_seed * _SEED_STRIDE + counter`` — a
 # plain affine map keeps them stable, collision-free within a trace, and
@@ -77,6 +83,7 @@ class TraceRequest:
     arrival: float
     max_new: int
     slo_class: str = ""
+    tenant: str = ""
     segments: tuple[tuple[int, int], ...] = ()
     tokens: tuple[int, ...] | None = None
 
@@ -101,6 +108,8 @@ class TraceRequest:
     def to_line(self) -> dict:
         d = {"rid": self.rid, "arrival": self.arrival,
              "max_new": self.max_new, "slo_class": self.slo_class}
+        if self.tenant:
+            d["tenant"] = self.tenant
         if self.tokens is not None:
             d["tokens"] = list(self.tokens)
         else:
@@ -112,6 +121,7 @@ class TraceRequest:
         return cls(rid=int(d["rid"]), arrival=float(d["arrival"]),
                    max_new=int(d["max_new"]),
                    slo_class=str(d.get("slo_class", "")),
+                   tenant=str(d.get("tenant", "")),
                    segments=tuple((int(s), int(n))
                                   for s, n in d.get("segments", [])),
                    tokens=(tuple(int(t) for t in d["tokens"])
@@ -279,7 +289,48 @@ def burst_trace(seed: int, *, bursts: int = 4, burst_size: int = 4,
                  slo_classes=dict(slo_classes), requests=reqs)
 
 
-GENERATORS = {"chat": chat_trace, "doclong": doc_trace, "burst": burst_trace}
+def mixed_tenant_trace(seed: int, *, tenants: int = 3, turns: int = 4,
+                       sys_tokens: int = 48, user_tokens: int = 16,
+                       max_new: int = 12, turn_gap_s: float = 1.0,
+                       start_spread_s: float = 0.5,
+                       slo_classes: Mapping[str, SLOClass],
+                       slo_class: str = "interactive",
+                       vocab_size: int = 512) -> Trace:
+    """Interleaved multi-tenant chat — the affinity-routing workload.
+
+    Each tenant ``t{i}`` runs one growing conversation (system segment +
+    one fresh user segment per turn, exactly the :func:`chat_trace`
+    prefix-reuse shape) tagged with its tenant label.  Tenant start
+    offsets and think-time gaps are exponential draws, so the merged
+    arrival stream **interleaves** tenants: a round-robin router sprays
+    one tenant's turns across replicas (each replica holds a fragment of
+    the prefix chain), while a prefix-affinity router keeps every turn on
+    the replica that already caches the conversation — the spread this
+    trace exists to expose."""
+    rng = np.random.default_rng(seed)
+    seeds = _SegmentSeeds(seed)
+    reqs: list[TraceRequest] = []
+    rid = 0
+    for i in range(tenants):
+        t = start_spread_s * rng.exponential()
+        segs: list[tuple[int, int]] = [(seeds.next(), sys_tokens)]
+        for turn in range(turns):
+            if turn:
+                t += turn_gap_s * (1.0 + 0.3 * rng.exponential())
+            segs.append((seeds.next(), user_tokens))
+            reqs.append(TraceRequest(rid=rid, arrival=round(t, 9),
+                                     max_new=max_new, slo_class=slo_class,
+                                     tenant=f"t{i}",
+                                     segments=tuple(segs)))
+            rid += 1
+    reqs.sort(key=lambda r: (r.arrival, r.rid))
+    reqs = [dataclasses.replace(r, rid=i) for i, r in enumerate(reqs)]
+    return Trace(workload="mixed_tenant", seed=seed, vocab_size=vocab_size,
+                 slo_classes=dict(slo_classes), requests=reqs)
+
+
+GENERATORS = {"chat": chat_trace, "doclong": doc_trace, "burst": burst_trace,
+              "mixed_tenant": mixed_tenant_trace}
 
 
 # -- replay ---------------------------------------------------------------
@@ -298,7 +349,8 @@ def replay(trace: Trace, session) -> dict:
         raise ValueError("replay() needs a fresh, idle session")
     for r in trace.requests:
         session.submit(r.materialize(trace.vocab_size), r.max_new,
-                       arrival=r.arrival, slo_class=r.slo_class)
+                       arrival=r.arrival, slo_class=r.slo_class,
+                       tenant=r.tenant)
     session.drain()
     records = per_request_breakdown(session.completed.values())
     agg = aggregate_requests(records, trace.slo_classes,

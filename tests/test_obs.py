@@ -81,6 +81,67 @@ def test_snapshot_and_prometheus_exposition():
     assert text.endswith("\n")
 
 
+def test_registry_instance_labels_disambiguate_series():
+    """Two labeled registries (a fleet) create disjoint series under the
+    same metric names; their snapshots merge without collisions."""
+    regs = {name: MetricsRegistry(labels={"replica": name})
+            for name in ("r0", "r1")}
+    for i, reg in enumerate(regs.values()):
+        reg.counter("kvswap_io_read_bytes_total", "bytes").inc(10 * (i + 1))
+    snaps = [r.snapshot() for r in regs.values()]
+    assert list(snaps[0]) == ['kvswap_io_read_bytes_total{replica="r0"}']
+    merged = {**snaps[0], **snaps[1]}
+    assert len(merged) == 2
+    assert merged['kvswap_io_read_bytes_total{replica="r0"}'] == 10
+    assert merged['kvswap_io_read_bytes_total{replica="r1"}'] == 20
+    # exposition: one TYPE header per family, labels on each sample
+    text = regs["r0"].to_prometheus()
+    assert "# TYPE kvswap_io_read_bytes_total counter" in text
+    assert 'kvswap_io_read_bytes_total{replica="r0"} 10' in text
+    # per-call labels merge with (and override nothing in) the defaults
+    reg = regs["r0"]
+    reg.counter("x_total", labels={"reason": "overload"}).inc()
+    assert reg.get("x_total", labels={"reason": "overload"}).value == 1
+    assert reg.snapshot()['x_total{reason="overload",replica="r0"}'] == 1
+
+
+def test_registry_unlabeled_snapshot_byte_identical():
+    """The zero-label path renders bare names — a single-replica process
+    exports exactly the historical format."""
+    import json
+
+    def build(reg):
+        reg.counter("b_total", "a counter").inc(5)
+        reg.histogram("lat_seconds", "latency").observe(0.5)
+        return reg
+
+    plain = build(MetricsRegistry())
+    defaulted = build(MetricsRegistry(labels=None))
+    assert json.dumps(plain.snapshot(), sort_keys=True) \
+        == json.dumps(defaulted.snapshot(), sort_keys=True)
+    assert plain.to_prometheus() == defaulted.to_prometheus()
+    assert "lat_seconds_count 1" in plain.to_prometheus()
+
+
+def test_registry_label_validation():
+    with pytest.raises(ValueError):
+        MetricsRegistry(labels={"bad key!": "v"})
+    with pytest.raises(ValueError):
+        MetricsRegistry(labels={"k": 'quote"inside'})
+    hist = MetricsRegistry(labels={"replica": "r0"}).histogram("h_seconds")
+    hist.observe(1.0)
+    assert hist.labels == {"replica": "r0"}
+
+
+def test_labeled_histogram_prometheus_quantiles():
+    reg = MetricsRegistry(labels={"replica": "r9"})
+    reg.histogram("lat_seconds", "latency").observe(0.5)
+    text = reg.to_prometheus()
+    assert 'lat_seconds{quantile="0.5",replica="r9"} 0.5' in text
+    assert 'lat_seconds_sum{replica="r9"} 0.5' in text
+    assert 'lat_seconds_count{replica="r9"} 1' in text
+
+
 # ------------------------------------------------------------------ spans
 
 def test_tracer_disabled_records_nothing():

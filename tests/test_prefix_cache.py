@@ -314,6 +314,45 @@ class TestPrefixCache:
                 n_layers=1, group_size=2, n_kv_heads=1, head_dim=4,
                 dtype=np.float32)
 
+    def test_peek_agrees_with_match(self):
+        with _open_cache(PrefixCache(PrefixCacheConfig(block_tokens=4))) as c:
+            toks = np.arange(16)
+            _put_chain(c, toks)
+            other = toks.copy()
+            other[9] = 99
+            assert c.peek(toks) == 16
+            assert c.peek(other) == 8
+            assert c.peek(np.arange(100, 116)) == 0
+
+    def test_peek_is_observably_side_effect_free(self):
+        """peek() must not move LRU order, mutate stats, pin, or charge
+        I/O — the router scores every replica per submission, and a
+        scoring pass that perturbed eviction order would make routing
+        observable in cache behavior."""
+        import dataclasses as _dc
+
+        acct = IOAccountant(NVME)
+        with _open_cache(PrefixCache(PrefixCacheConfig(block_tokens=4),
+                                     accountant=acct)) as c:
+            toks = np.arange(16)
+            _put_chain(c, toks)
+            before_stats = _dc.asdict(c.stats)
+            before_lru = {bid: m.last_used
+                          for bid, m in c.manifest.blocks.items()}
+            before_io = acct.snapshot()
+            for _ in range(3):
+                c.peek(toks)
+                c.peek(np.arange(50, 66))
+            assert _dc.asdict(c.stats) == before_stats
+            assert {bid: m.last_used
+                    for bid, m in c.manifest.blocks.items()} == before_lru
+            assert all(m.pins == 0 for m in c.manifest.blocks.values())
+            assert acct.snapshot() == before_io
+
+    def test_peek_on_unopened_cache_is_zero(self):
+        assert PrefixCache(PrefixCacheConfig(block_tokens=4)).peek(
+            np.arange(8)) == 0
+
 
 # --------------------------------------------------------------------------
 # engine integration: the acceptance claims
@@ -422,6 +461,43 @@ class TestEnginePrefixCache:
                 # 24 cached tokens = 3 blocks/row published contiguously per
                 # chain ⇒ 1 run per (layer, chain): 2 layers × 2 chains
                 assert snap["read_requests"] == 4
+
+    def test_failed_restore_unpins_on_every_path(self, tiny_engine_parts):
+        """Regression for the pin-leak hazard in the restore discipline:
+        a storage fault that escapes ``read_chain`` mid-restore must not
+        leave matched blocks pinned — a leaked pin makes the block
+        unevictable forever (LRUPinPolicy never victimizes pinned
+        blocks) and would silently shrink the budget with every failed
+        admission.  The cache must stay fully usable afterwards."""
+        from repro.faults.errors import MediaError, StorageFault
+
+        rng = tiny_engine_parts[-1]
+        prompt = rng.integers(0, 97, (2, 37)).astype(np.int32)
+        with PrefixCache(PrefixCacheConfig(block_tokens=8)) as cache:
+            with _engine(tiny_engine_parts) as e1:
+                e1.prefill(prompt)
+                e1.publish(cache)
+            with _engine(tiny_engine_parts) as e2:
+                orig = cache.store.read_extents
+
+                def boom(*a, **kw):
+                    raise MediaError("injected: extent unreadable")
+
+                cache.store.read_extents = boom
+                try:
+                    with pytest.raises(StorageFault):
+                        e2.admit_row(0, prompt[0], cache)
+                finally:
+                    cache.store.read_extents = orig
+                assert all(m.pins == 0
+                           for m in cache.manifest.blocks.values())
+                # the same admission now restores warm — nothing was
+                # quarantined, evicted, or left half-admitted
+                e2.admit_row(0, prompt[0], cache)
+                assert e2.prefill_report["cached_tokens"] > 0
+                e2.retire_row(0)
+                assert all(m.pins == 0
+                           for m in cache.manifest.blocks.values())
 
     def test_hybrid_model_falls_back(self, rng):
         import jax

@@ -97,6 +97,38 @@ class TestTraceSchema:
         with pytest.raises(ValueError, match="newer"):
             Trace.load(p)
 
+    def test_load_accepts_version_1(self, tmp_path):
+        """v1 files (pre-tenant) stay readable: absent ``tenant`` reads as
+        the empty label and the declared version is preserved."""
+        p = tmp_path / "v1.jsonl"
+        p.write_text(
+            json.dumps({"format": "kvswap-trace", "version": 1,
+                        "workload": "chat", "seed": 7, "vocab_size": 97,
+                        "slo_classes": {}}) + "\n"
+            + json.dumps({"rid": 0, "arrival": 0.0, "max_new": 2,
+                          "slo_class": "interactive",
+                          "segments": [[7000001, 8]]}) + "\n")
+        tr = Trace.load(p)
+        assert tr.version == 1
+        assert tr.requests[0].tenant == ""
+
+    def test_mixed_tenant_labels_and_roundtrip(self, tmp_path):
+        tr = trace_mod.mixed_tenant_trace(7, tenants=3, turns=2,
+                                          slo_classes=SLO)
+        assert {r.tenant for r in tr.requests} == {"t0", "t1", "t2"}
+        # per-tenant turns extend each other token-for-token (the
+        # prefix-affinity property the router benchmark leans on)
+        by_tenant = {}
+        for r in tr.requests:
+            by_tenant.setdefault(r.tenant, []).append(r)
+        for turns in by_tenant.values():
+            turns.sort(key=lambda r: len(r.segments))
+            for prev, cur in zip(turns, turns[1:]):
+                assert cur.segments[:len(prev.segments)] == prev.segments
+        tr.save(tmp_path / "mt.jsonl")
+        tr2 = Trace.load(tmp_path / "mt.jsonl")
+        assert tr2 == tr and tr2.version == trace_mod.TRACE_VERSION == 2
+
     def test_chat_turns_share_token_prefixes(self):
         """The prefix-reuse-heavy property is structural: turn t's prompt
         extends turn t-1's token-for-token."""
