@@ -22,7 +22,7 @@ import os
 
 import numpy as np
 
-from repro.cache.blocks import TokenBlock, chain_blocks
+from repro.cache.blocks import ROOT_ID, TokenBlock, chain_blocks
 from repro.cache.manifest import BlockMeta, CacheGeometry, Manifest
 from repro.cache.policy import LRUPinPolicy
 from repro.cache.store import PrefixBlockStore
@@ -314,6 +314,49 @@ class PrefixCache:
             self.stats.dedup_blocks += 1
             if self._obs is not None:
                 self._m["dedup_blocks"].inc()
+
+    def chain_metas(self, head_id: str) -> list[BlockMeta] | None:
+        """Resolve a chain by its **head** block id: walk parent pointers
+        root-ward and return the metas root-first, or ``None`` if any link
+        (including the head itself) is no longer resident — a quarantined
+        or evicted ancestor breaks the whole handle.
+
+        This is the restore-by-reference primitive of the disagg handoff: a
+        prefill ticket carries only the chain head id, and the decode side
+        resolves it here without re-hashing the prompt.  Pure metadata walk
+        — no LRU touch, no stats, no I/O (same contract as :meth:`peek`).
+        """
+        if self.manifest is None:
+            return None
+        out: list[BlockMeta] = []
+        cur: str = head_id
+        while cur != ROOT_ID:
+            meta = self.manifest.blocks.get(cur)
+            if meta is None:
+                return None
+            out.append(meta)
+            cur = meta.parent_id
+        out.reverse()
+        return out
+
+    def verify_chain(self, metas: list[BlockMeta]) -> bool:
+        """Re-hash every block's extent against its published CRC32 without
+        serving any KV.  A mismatch quarantines the block (and descendants)
+        exactly like :meth:`read_chain` would, bumps the corruption stats,
+        and returns ``False`` — the caller's signal to re-prefill rather
+        than hand the chain to a decode session.  Blocks with
+        ``checksum == 0`` (pre-checksum manifests) pass vacuously.
+        """
+        for m in metas:
+            if m.checksum and self.store.checksum_extent(
+                    m.start_group, m.n_groups) != m.checksum:
+                dropped = self.quarantine(m.block_id)
+                self.stats.corrupt_blocks += 1
+                if self._obs is not None:
+                    self._m["corrupt_blocks"].inc()
+                    self._m["quarantined_blocks"].inc(dropped)
+                return False
+        return True
 
     # -- pinning ----------------------------------------------------------
     def pin(self, metas: list[BlockMeta]) -> None:

@@ -163,6 +163,22 @@ class EngineConfig:
         return np.dtype(self.dtype)
 
 
+class PublishResult(int):
+    """Return of :meth:`KVSwapEngine.publish`: behaves as the plain block
+    count it always was (``+=`` accounting in the serving layer keeps
+    working), but also carries ``heads`` — per published row, the deepest
+    resident block id of that row's hash chain.  Disagg prefill tickets
+    hand this id across the prefill/decode boundary so the decode side can
+    restore the chain by reference instead of re-hashing the prompt.
+    ``heads[row] is None`` when nothing of the row's chain is resident
+    (e.g. the prompt is shorter than one block)."""
+
+    def __new__(cls, published: int, heads: dict[int, str | None] | None = None):
+        self = super().__new__(cls, published)
+        self.heads = heads or {}
+        return self
+
+
 @dataclasses.dataclass
 class StepStats:
     """Per-decode-step accounting.
@@ -911,7 +927,8 @@ class KVSwapEngine:
         self.row_valid[bi] = 0
 
     def publish(self, cache, tokens: np.ndarray | Sequence[np.ndarray] | None = None,
-                rows: Sequence[int] | None = None, save: bool = True) -> int:
+                rows: Sequence[int] | None = None,
+                save: bool = True) -> "PublishResult":
         """Publish this request's KV into ``cache`` (end-of-request hook).
 
         ``tokens`` is the per-row served token history (prompt + every token
@@ -923,17 +940,20 @@ class KVSwapEngine:
         the same approximation this engine itself continues with).
 
         Blocks are published root-first and deduplicated by content hash;
-        returns the number of newly resident blocks.  ``save=False`` defers
-        the manifest write — per-request publishers (the serving session
-        retires rows one at a time) save once at drain instead of rewriting
-        the manifest per retirement.
+        returns a :class:`PublishResult` — an ``int`` counting newly resident
+        blocks, whose ``.heads`` maps each published row to the deepest
+        resident block id of its chain (the handle a disagg prefill ticket
+        carries so the decode side can restore without re-hashing the
+        prompt).  ``save=False`` defers the manifest write — per-request
+        publishers (the serving session retires rows one at a time) save
+        once at drain instead of rewriting the manifest per retirement.
         """
         if any(kind != "kv" for kind in self.layer_kinds):
-            return 0
+            return PublishResult(0, {})
         if tokens is None:
             tokens = self._prompt_np
         if tokens is None:        # nothing prefilled yet → nothing to publish
-            return 0
+            return PublishResult(0, {})
         g = self.cfg.group_size
         cache.open(n_layers=len(self.kv_layers), group_size=g,
                    n_kv_heads=self.model.n_kv_heads,
@@ -944,6 +964,7 @@ class KVSwapEngine:
         nkv = len(self.kv_layers)
         hkv, hd = self.model.n_kv_heads, self.model.head_dim
         published = 0
+        heads: dict[int, str | None] = {}
         bg = bt // g
         for bi in (rows if rows is not None else range(self.batch)):
             toks = np.asarray(tokens[bi]).reshape(-1)
@@ -960,26 +981,29 @@ class KVSwapEngine:
                 cache.touch(blk.block_id)
                 n_res += 1
             missing = chain[n_res:]
-            if not missing:
-                continue
-            g0 = missing[0].index * bg
-            ngr = len(missing) * bg
-            k = np.empty((nkv, ngr, g, hkv, hd), dtype=self.cfg.np_dtype)
-            v = np.empty_like(k)
-            for j in range(nkv):
-                # retried like a decode fetch: a transient read error must
-                # not fail the request at the finish line (publishing is
-                # best-effort, but a retry is cheaper than losing the chain)
-                k[j], v[j] = self.managers[j].read_run_with_retry(
-                    bi, ReadRun(g0, ngr, tuple(range(g0, g0 + ngr))))
-            for blk in missing:
-                off = (blk.index * bg) - g0
-                if not cache.put_block(blk, k[:, off:off + bg], v[:, off:off + bg]):
-                    break   # budget exhausted by pinned blocks; keep the chain rooted
-                published += 1
+            n_ok = n_res
+            if missing:
+                g0 = missing[0].index * bg
+                ngr = len(missing) * bg
+                k = np.empty((nkv, ngr, g, hkv, hd), dtype=self.cfg.np_dtype)
+                v = np.empty_like(k)
+                for j in range(nkv):
+                    # retried like a decode fetch: a transient read error must
+                    # not fail the request at the finish line (publishing is
+                    # best-effort, but a retry is cheaper than losing the chain)
+                    k[j], v[j] = self.managers[j].read_run_with_retry(
+                        bi, ReadRun(g0, ngr, tuple(range(g0, g0 + ngr))))
+                for blk in missing:
+                    off = (blk.index * bg) - g0
+                    if not cache.put_block(blk, k[:, off:off + bg],
+                                           v[:, off:off + bg]):
+                        break   # budget exhausted by pinned blocks; keep the chain rooted
+                    published += 1
+                    n_ok += 1
+            heads[int(bi)] = chain[n_ok - 1].block_id if n_ok else None
         if save:
             cache.save()
-        return published
+        return PublishResult(published, heads)
 
     # ------------------------------------------------------------------
     def decode_step(self, token_ids: np.ndarray) -> jax.Array:

@@ -21,9 +21,10 @@ import numpy as np
 from repro.core.offload import KVDiskStore
 from repro.core.reuse_buffer import ReuseBuffer
 from repro.core.rolling_buffer import RollingBuffer
-from repro.faults.errors import FetchFailed, StorageFault
-from repro.faults.retry import RetryPolicy, call_with_retries
+from repro.faults.errors import FetchFailed
+from repro.faults.retry import RetryPolicy
 from repro.io.scheduler import ReadRun, ReadScheduler
+from repro.tiers.disk import DiskTier
 
 REGION_REUSE = 0
 REGION_ROLLING = 1
@@ -68,40 +69,35 @@ class KVCacheManager:
         self.rolling = rolling
         self.layer = layer
         self.scheduler = scheduler or ReadScheduler(max_gap=0)
-        # bounded retry-with-backoff for disk reads (docs/robustness.md):
-        # transient faults are absorbed here, charging modeled backoff to
-        # the accountant; exhaustion escalates as a typed FetchFailed with
-        # (layer, row, run) context.  None = fail on first error.
+        # the authoritative bottom of the tier chain: run planning, bounded
+        # retry-with-backoff (docs/robustness.md) and the typed FetchFailed
+        # escalation all live in the DiskTier wrapper now
+        self.disk = DiskTier(store=store, layer=layer,
+                             scheduler=self.scheduler, retry=retry, obs=obs)
         self.retry = retry
-        self.retries = 0          # retried attempts, lifetime
-        self.fetch_failures = 0   # runs given up on, lifetime
         # optional host-RAM warm tier (repro.tiers.WarmTier) between the
         # reuse buffer and disk: fetch consults it before planning disk
         # reads, and reuse-buffer evictions demote into it (victim cache)
         self.warm = warm
         if warm is not None:
             reuse.victim_sink = self._demote
-        # observability: ReadScheduler run-plan counters.  The scheduler
-        # itself stays pure (it only plans); its per-plan stats() summary is
-        # published here, at the call site that executes the plan.
+        # the ordered miss-resolution chain (repro.tiers.KVTier): fetch
+        # walks it top to bottom, handing each tier's residue to the next.
+        # The disk tier is always last and always authoritative.
+        self.chain = ([warm] if warm is not None else []) + [self.disk]
         self._obs = obs
-        if obs is not None and obs.enabled:
-            reg = obs.registry
-            self._m_plan_requests = reg.counter(
-                "kvswap_read_plan_requests_total",
-                "coalesced sequential runs planned by ReadScheduler")
-            self._m_plan_groups = reg.counter(
-                "kvswap_read_plan_groups_read_total",
-                "groups read by planned runs (requested + gap)")
-            self._m_plan_wasted = reg.counter(
-                "kvswap_read_plan_groups_wasted_total",
-                "gap groups read through but not requested")
-            self._m_retries = reg.counter(
-                "kvswap_io_retries_total",
-                "disk read attempts retried after a transient fault")
-            self._m_fetch_failures = reg.counter(
-                "kvswap_io_fetch_failures_total",
-                "group runs unrecoverable after the retry budget")
+
+    # lifetime fault counters live on the disk tier (it owns the retry
+    # ladder); these views keep the serving layer's accounting stable
+    @property
+    def retries(self) -> int:
+        """Retried disk-read attempts, lifetime (see ``DiskTier``)."""
+        return self.disk.retries
+
+    @property
+    def fetch_failures(self) -> int:
+        """Group runs given up on after the retry budget, lifetime."""
+        return self.disk.fetch_failures
 
     def _demote(self, batch_idx: int, gid: int, kv: np.ndarray) -> None:
         """Reuse-buffer eviction → warm-tier admission.  With an int8 disk
@@ -114,50 +110,25 @@ class KVCacheManager:
 
     def read_run_with_retry(self, batch_idx: int,
                             run: ReadRun) -> tuple[np.ndarray, np.ndarray]:
-        """Execute one coalesced run with bounded retry-with-backoff.
-
-        Transient faults are retried per ``self.retry`` with each modeled
-        backoff delay charged as accountant stall time — inside the active
-        ``track()`` scope, so retries show up in the same per-step
-        ``io_seconds`` as the read itself.  Anything unrecoverable
-        (persistent media errors, an exhausted budget, a real ``OSError``)
-        escalates as :class:`~repro.faults.errors.FetchFailed` carrying
-        the (layer, row, run) the serving layer needs to fail exactly one
-        request."""
-        read = lambda: self.store.read_run(self.layer, batch_idx,
-                                           run.start, run.count)
-        try:
-            if self.retry is None:
-                return read()
-            acc = getattr(self.store, "accountant", None)
-
-            def backoff(delay: float) -> None:
-                self.retries += 1
-                if self._obs is not None and self._obs.enabled:
-                    self._m_retries.inc()
-                if acc is not None:
-                    acc.charge_stall(delay)
-
-            return call_with_retries(read, policy=self.retry,
-                                     on_backoff=backoff)
-        except (StorageFault, OSError) as exc:
-            self.fetch_failures += 1
-            if self._obs is not None and self._obs.enabled:
-                self._m_fetch_failures.inc()
-            raise FetchFailed(
-                f"layer {self.layer} row {batch_idx} groups "
-                f"[{run.start},{run.start + run.count}) unrecoverable: {exc}",
-                layer=self.layer, row=batch_idx, start=run.start,
-                count=run.count) from exc
+        """One coalesced run with bounded retry-with-backoff — delegated to
+        the :class:`~repro.tiers.disk.DiskTier` (which owns the retry
+        ladder and its counters).  Kept on the manager because the engine's
+        publish path reads chains through it."""
+        return self.disk.read_run_with_retry(batch_idx, run)
 
     def fetch(self, group_ids: np.ndarray, group_mask: np.ndarray) -> MappingTable:
-        """Resolve selected groups: reuse hits stay put, warm-tier hits are
-        promoted back from host RAM, true misses load from disk.
+        """Resolve selected groups: reuse hits stay put, everything else
+        walks the **ordered tier chain** (``self.chain``).
 
         Miss resolution order is the memory hierarchy: reuse buffer →
-        warm tier (when attached) → disk.  Only the residue after the warm
-        tier is planned by the :class:`ReadScheduler` into sorted, coalesced
-        sequential runs before touching the store (§3.4.4).
+        warm tier (when attached) → disk.  Each tier serves what it holds
+        (``KVTier.serve_run``) and hands the residue to the next; the disk
+        tier plans its residue into sorted, coalesced sequential runs
+        before touching the store (§3.4.4) and is authoritative, so the
+        chain never ends with unresolved groups.  Every group a tier
+        serves is promoted into the reuse buffer exactly like a disk load
+        — including the staged-overflow and device-mirror delta
+        (new_groups) paths.
 
         ``group_ids, group_mask``: ``[B, M]``.
         """
@@ -172,42 +143,25 @@ class KVCacheManager:
             want = list(dict.fromkeys(want))
             want_set = set(want)
             _, misses = self.reuse.lookup(bi, want)
-            if self.warm is not None and misses:
-                # consult the warm tier first; only true misses go to disk.
-                # A hit pops the entry (exclusive victim cache) and promotes
-                # the group back into the reuse buffer exactly like a disk
-                # load — including the staged-overflow and device-mirror
-                # delta (new_groups) paths.
-                disk_misses = []
-                for gid in misses:
-                    kv_flat = self.warm.serve(self.layer, bi, gid,
-                                              self.store.dtype)
-                    if kv_flat is None:
-                        disk_misses.append(gid)
-                        continue
-                    slot = self.reuse.insert(bi, gid, kv_flat, protected=want_set)
-                    if slot is None:
-                        staged[(bi, gid)] = kv_flat
-                    else:
-                        new_groups.append((bi, slot, kv_flat))
-                misses = disk_misses
-            plan = self.scheduler.plan(misses)
-            if plan and self._obs is not None and self._obs.enabled:
-                st = self.scheduler.stats(plan)
-                self._m_plan_requests.inc(st["requests"])
-                self._m_plan_groups.inc(st["groups_read"])
-                self._m_plan_wasted.inc(st["groups_wasted"])
-            for run in plan:
-                k_r, v_r = self.read_run_with_retry(bi, run)
-                for gid in run.ids:
-                    off = gid - run.start
-                    kv = np.stack([k_r[off], v_r[off]], axis=1)  # [G, 2, Hkv, d]
+            for tier in self.chain:
+                if not misses:
+                    break
+                served, misses = tier.serve_run(self.layer, bi, misses,
+                                                self.store.dtype)
+                for gid, kv in served:
                     # current working set is pinned; overflow stays staged
                     slot = self.reuse.insert(bi, gid, kv, protected=want_set)
                     if slot is None:
                         staged[(bi, gid)] = kv
                     else:
                         new_groups.append((bi, slot, kv))
+            if misses:
+                raise FetchFailed(
+                    f"layer {self.layer} row {bi} groups {misses} not "
+                    f"resolved by any tier in the chain "
+                    f"({[t.name for t in self.chain]})",
+                    layer=self.layer, row=bi, start=int(misses[0]),
+                    count=len(misses))
             for mi in range(m):
                 if group_mask[bi, mi]:
                     gid = int(group_ids[bi, mi])

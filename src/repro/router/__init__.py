@@ -33,7 +33,7 @@ See docs/architecture.md ("Multi-replica routing") for the scoring
 formula and the lockstep-clock rationale, docs/tuning.md for the knobs.
 """
 
-from repro.router.frontend import FrontEnd
+from repro.router.frontend import FrontEnd, parse_request
 from repro.router.policy import (LeastLoaded, PrefixAffinityRouter,
                                  RoundRobin, RoutingPolicy)
 from repro.router.pool import (DRAINING, LIVE, QUIESCED, Replica,
@@ -41,4 +41,4 @@ from repro.router.pool import (DRAINING, LIVE, QUIESCED, Replica,
 
 __all__ = ["FrontEnd", "LeastLoaded", "PrefixAffinityRouter", "RoundRobin",
            "RoutingPolicy", "Replica", "ReplicaPool", "LIVE", "DRAINING",
-           "QUIESCED"]
+           "QUIESCED", "parse_request"]

@@ -51,12 +51,12 @@ from repro.serving.errors import RequestRejected
 from repro.serving.metrics import aggregate_requests, request_record
 from repro.serving.sampling import SamplingParams
 
-__all__ = ["FrontEnd"]
+__all__ = ["FrontEnd", "parse_request"]
 
 _SAMPLING_KEYS = ("temperature", "top_k", "top_p", "seed")
 
 
-def _parse_request(request: Mapping):
+def parse_request(request: Mapping):
     """OpenAI-style dict -> the session submit arguments.
 
     Recognized keys: ``prompt`` (token ids, required), ``max_tokens``
@@ -92,6 +92,10 @@ def _parse_request(request: Mapping):
         "slo_class": str(request.get("slo_class", "")),
         "tenant": str(request.get("tenant", "")),
     }
+
+
+# the historical private name, kept for external patch points
+_parse_request = parse_request
 
 
 class FrontEnd:

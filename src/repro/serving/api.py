@@ -79,6 +79,12 @@ class Request:
     first_token_at: float | None = None  # clock when token 0 was sampled
     finished_at: float | None = None
     cached_tokens: int = 0              # prompt tokens restored from the cache
+    # admission-time warm-restore coverage, surfaced in request_record so a
+    # harness (e.g. the disagg benchmark) can assert per-request restore
+    # coverage without reaching into the engine.  Today identical to
+    # cached_tokens at admission; kept separate because cached_tokens is
+    # also the historical knob external callers mutate.
+    restored_tokens: int = 0
     error: str | None = None            # set iff state == FAILED
 
 
@@ -301,6 +307,7 @@ RequestRejected` (a ``ValueError``) and count on
             self.now += rep["modeled_seconds"]
             due.state, due.slot, due.admitted_at = RUNNING, i, self.now
             due.cached_tokens = rep["cached_tokens"]
+            due.restored_tokens = rep["cached_tokens"]
             sampler = due.sampler or make_row_sampler(due.sampling)
             self._slots[i] = _Slot(due, sampler,
                                    np.asarray(logits)[None, :])

@@ -86,6 +86,7 @@ def request_record(req) -> dict:
         "tokens": tokens,
         "prompt_tokens": int(req.prompt.shape[0]),
         "cached_tokens": int(req.cached_tokens),
+        "restored_tokens": int(getattr(req, "restored_tokens", 0)),
         "stopped_early": bool(req.stopped_early),
     }
 

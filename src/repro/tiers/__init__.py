@@ -1,6 +1,18 @@
-"""Memory tiers between the per-layer reuse buffer and the disk store."""
+"""KV storage tiers behind one protocol (:class:`~repro.tiers.base.KVTier`).
 
+``WarmTier`` (host-RAM victim cache), ``DiskTier`` (planner + retry over
+the authoritative disk store) and ``PrefixTier`` (content-addressed block
+cache) all speak ``lookup/serve/admit/invalidate/free_row`` with
+accountant charging, so :class:`~repro.core.manager.KVCacheManager` walks
+an ordered tier chain and the disagg handoff publishes into / restores
+from a shared tier rather than special-casing each layer of the stack.
+"""
+
+from repro.tiers.base import KVTier
+from repro.tiers.disk import DiskTier
+from repro.tiers.prefix import PrefixTier
 from repro.tiers.warm import (INDEX_ENTRY_BYTES, WarmTier, WarmTierStats,
                               warm_serve_time)
 
-__all__ = ["INDEX_ENTRY_BYTES", "WarmTier", "WarmTierStats", "warm_serve_time"]
+__all__ = ["INDEX_ENTRY_BYTES", "KVTier", "DiskTier", "PrefixTier",
+           "WarmTier", "WarmTierStats", "warm_serve_time"]

@@ -62,6 +62,7 @@ import numpy as np
 
 from repro.core import hardware
 from repro.core.offload import quant_groups
+from repro.tiers.base import KVTier
 
 # Modeled per-entry index overhead (key tuple, LRU links, row accounting),
 # charged against the budget alongside the slab bytes so the knob bounds
@@ -107,7 +108,7 @@ class _Entry:
     disk_nbytes: int           # bytes the replaced disk read would have moved
 
 
-class WarmTier:
+class WarmTier(KVTier):
     """Budgeted, quantized host-RAM victim cache keyed by
     ``(layer, row, group)``.
 
@@ -116,7 +117,15 @@ class WarmTier:
     and refuses outright if it alone exceeds the budget.  A zero/negative
     budget disables every operation (cheap early-outs), which is what makes
     ``warm_budget_bytes=0`` byte-identical to not having the tier at all.
+
+    One of the three :class:`~repro.tiers.base.KVTier` implementations:
+    the manager's fetch chain walks ``[warm, disk]``, so every verb here
+    (``lookup``/``serve``/``admit``/``invalidate``/``free_row``) conforms
+    to the shared protocol and the tier is interchangeable with the disk
+    and prefix wrappers in the conformance suite.
     """
+
+    name = "warm"
 
     def __init__(self, *, budget_bytes: int,
                  compute: hardware.ComputeSpec = hardware.ORIN,
@@ -190,6 +199,16 @@ class WarmTier:
             self._metrics[key].inc(n)
 
     # -- the victim-cache protocol ---------------------------------------
+    def lookup(self, layer: int, row: int, gids) -> list[int]:
+        """Resident subset of ``gids``, side-effect-free: no stats, no LRU
+        movement, no pop — the scheduling-probe counterpart of
+        :meth:`serve` (whose hits are exclusive and counted)."""
+        if not self.enabled:
+            return []
+        with self._lock:
+            return [int(g) for g in gids
+                    if (layer, row, int(g)) in self._entries]
+
     def admit(self, layer: int, row: int, gid: int, kv: np.ndarray, *,
               scale: float | None = None, disk_nbytes: int | None = None) -> bool:
         """Admit one evicted group (``kv: [G, 2, H_kv, d]``, full dtype).
@@ -321,6 +340,12 @@ class WarmTier:
                 self._uncharge(row, self._entries.pop(key).charged)
             self.stats.invalidated += len(doomed)
             self._minc("invalidated", len(doomed))
+
+    def free_row(self, row: int) -> None:
+        """Protocol name for :meth:`clear_row` (the historical verb the
+        store's coherence hooks call); both drop every layer's entries for
+        the row and zero its :meth:`row_bytes` accounting."""
+        self.clear_row(row)
 
     def _uncharge(self, row: int, charged: int) -> None:
         """Caller holds the lock."""

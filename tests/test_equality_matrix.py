@@ -139,6 +139,96 @@ class TestEqualityMatrix:
         for axis in range(6):
             assert len({c[axis] for c in cs}) == 2
 
+    def test_legacy_fetch_equals_tier_chain(self, setup):
+        """The tier-chain refactor is a pure re-plumbing: ``fetch`` through
+        the ordered ``KVTier`` chain must produce bit-identical tokens to
+        the pre-refactor hand-inlined path (warm per-group serve loop, then
+        ReadScheduler plan + retrying run reads) across
+        device_resident × async_io × kv_bits.  The legacy path is
+        reimplemented verbatim below and bound over each manager, so the
+        comparison holds even as the chain walker evolves.
+        """
+        import types
+
+        from repro.core.manager import MappingTable
+
+        def legacy_fetch(self, group_ids, group_mask):
+            # pre-refactor body (commit bd149e8), minus the obs plan
+            # counters that moved into DiskTier
+            b, m = group_ids.shape
+            slots = np.full((b, m), -1, dtype=np.int64)
+            ids_out = np.where(group_mask, group_ids, -1)
+            staged, new_groups = {}, []
+            for bi in range(b):
+                want = [int(g) for g, ok
+                        in zip(group_ids[bi], group_mask[bi]) if ok]
+                want = list(dict.fromkeys(want))
+                want_set = set(want)
+                _, misses = self.reuse.lookup(bi, want)
+                if self.warm is not None and misses:
+                    disk_misses = []
+                    for gid in misses:
+                        kv_flat = self.warm.serve(self.layer, bi, gid,
+                                                  self.store.dtype)
+                        if kv_flat is None:
+                            disk_misses.append(gid)
+                            continue
+                        slot = self.reuse.insert(bi, gid, kv_flat,
+                                                 protected=want_set)
+                        if slot is None:
+                            staged[(bi, gid)] = kv_flat
+                        else:
+                            new_groups.append((bi, slot, kv_flat))
+                    misses = disk_misses
+                for run in self.scheduler.plan(misses):
+                    k_r, v_r = self.read_run_with_retry(bi, run)
+                    for gid in run.ids:
+                        off = gid - run.start
+                        kv = np.stack([k_r[off], v_r[off]], axis=1)
+                        slot = self.reuse.insert(bi, gid, kv,
+                                                 protected=want_set)
+                        if slot is None:
+                            staged[(bi, gid)] = kv
+                        else:
+                            new_groups.append((bi, slot, kv))
+                for mi in range(m):
+                    if group_mask[bi, mi]:
+                        gid = int(group_ids[bi, mi])
+                        slot = self.reuse.slot_of(bi, gid)
+                        slots[bi, mi] = -2 if slot is None else slot
+            return MappingTable(
+                group_ids=ids_out, slots=slots,
+                group_mask=np.asarray(group_mask, bool),
+                rolling_fill=self.rolling.fills.copy(), staged=staged,
+                new_groups=new_groups)
+
+        cfg, params, adapter, calib, prompts = setup
+        for dr in (False, True):
+            for aio in (False, True):
+                for kvb in (16, 8):
+                    # warm tier on at kv8 so the legacy warm-serve branch
+                    # actually runs (bit-exact regime)
+                    ecfg = make_cfg(device_resident=dr, async_io=aio,
+                                    kv_bits=kvb,
+                                    warm_budget_bytes=WARM_BUDGET
+                                    if kvb == 8 else 0)
+
+                    def run(patch_legacy):
+                        with ServeSession(adapter, params, ecfg, slots=2,
+                                          calib_k=calib) as sess:
+                            if patch_legacy:
+                                for mgr in sess.engine.managers:
+                                    mgr.fetch = types.MethodType(
+                                        legacy_fetch, mgr)
+                            rids = [sess.submit(p, MAX_NEW) for p in prompts]
+                            done = sess.drain()
+                            return [done[r].output for r in rids]
+
+                    for got, want in zip(run(False), run(True)):
+                        np.testing.assert_array_equal(
+                            got, want,
+                            err_msg=f"dr={dr} aio={aio} kv={kvb}")
+
     def test_kv_bits_references_are_distinct_tiers(self, setup):
         """Guard against the matrix silently collapsing: the per-kv_bits
         reference split exists because the int8 disk tier is a different

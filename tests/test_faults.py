@@ -483,15 +483,17 @@ class TestSessionUnderFaults:
         with make_session(parts) as sess:
             rids = [sess.submit(p, max_new=6) for p in prompts]
             fired = []
-            mgr = sess.engine.managers[0]
-            orig = mgr.read_run_with_retry
-            def sabotage(bi, run):
+            # patch the disk tier — the retry primitive's home since the
+            # tier-chain refactor — so the fault fires inside fetch()
+            tier = sess.engine.managers[0].disk
+            orig = tier.read_run_with_retry
+            def sabotage(bi, run, layer=None):
                 if not fired and bi == 1 and sess.engine.row_seq[1] >= 22:
                     fired.append(True)
                     raise FetchFailed("injected mid-decode", layer=0, row=1,
                                       start=run.start, count=run.count)
-                return orig(bi, run)
-            mgr.read_run_with_retry = sabotage
+                return orig(bi, run, layer=layer)
+            tier.read_run_with_retry = sabotage
             sess.drain()
             stats = sess.stats()
         assert fired, "sabotage never triggered; adjust the trip condition"
